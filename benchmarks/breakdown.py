@@ -1,0 +1,35 @@
+"""Paper Fig. 22: OctopusANN cumulative optimization breakdown (QPS and
+pages/query as techniques stack up baseline -> +MemGraph -> +PS&PSe -> +DW)."""
+from __future__ import annotations
+
+from repro.core import get_preset
+
+from benchmarks import common
+
+STACK = [
+    ("baseline", {}),
+    ("+memgraph", {"memgraph_frac": 0.01}),
+    ("+ps+pse", {"memgraph_frac": 0.01, "page_shuffle": True,
+                 "page_search": True}),
+    ("+dw(=octopus)", {"memgraph_frac": 0.01, "page_shuffle": True,
+                       "page_search": True, "dynamic_width": True}),
+]
+
+
+def main(dataset="sift-like", L=48):
+    rows = []
+    prev_qps = None
+    for name, over in STACK:
+        r = common.run(dataset, "baseline", L, **over)
+        r["stage"] = name
+        r["qps_gain"] = (round(r["qps"] / prev_qps - 1, 3)
+                         if prev_qps else 0.0)
+        prev_qps = r["qps"]
+        rows.append(r)
+    common.print_table(rows, cols=["stage", "recall@10", "qps", "qps_gain",
+                                   "pages_per_query", "hops"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

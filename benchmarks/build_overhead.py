@@ -1,0 +1,30 @@
+"""Paper Table 6 / Finding 6: index construction overhead (build time, peak
+memory, disk and memory footprint) — PageShuffle is the expensive one."""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def main(datasets=("sift-like", "deep-like")):
+    rows = []
+    for ds in datasets:
+        for preset in ("baseline", "memgraph", "starling"):
+            idx = common.index(ds, preset)
+            st = idx.build_stats
+            rows.append({
+                "dataset": ds, "preset": preset,
+                "graph_build_s": round(st.get("graph_build_s", 0), 1),
+                "shuffle_s": round(st.get("shuffle_s", 0), 2),
+                "shuffle_peak_mb": round(
+                    st.get("approx_peak_bytes", 0) / 2**20, 1),
+                "memgraph_build_s": round(st.get("memgraph_build_s", 0), 2),
+                "disk_mb": round(st.get("disk_bytes", 0) / 2**20, 1),
+                "memory_mb": round(st.get("memory_bytes", 0) / 2**20, 2),
+                "overlap_ratio": round(st.get("overlap_ratio", 0), 4),
+            })
+    common.print_table(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

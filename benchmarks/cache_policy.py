@@ -1,0 +1,21 @@
+"""Beyond-paper ablation: SSSP cache (the paper's choice, §4.1.2) vs
+workload-frequency cache at equal budget."""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def main(dataset="sift-like", L=48, frac=0.02):
+    rows = []
+    for policy in ("sssp", "freq"):
+        r = common.run(dataset, "cache", L, cache_frac=frac,
+                       cache_policy=policy)
+        r["policy"] = policy
+        rows.append(r)
+    common.print_table(rows, cols=["policy", "recall@10", "qps",
+                                   "pages_per_query", "hops"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Paper Figs. 16-18 + Table 7: combination study C1..C5 (+ references)."""
+from __future__ import annotations
+
+from benchmarks import common
+
+COMBOS = ("baseline", "memgraph", "dynamicwidth",
+          "C1", "C2", "C3", "C4", "C5")
+LS = (16, 24, 32, 48, 64, 96)
+
+
+def main(datasets=("sift-like", "deep-like", "spacev-like", "gist-like"),
+         Ls=LS):
+    rows = []
+    for ds in datasets:
+        over_ds = {"page_bytes": 16384} if ds == "gist-like" else {}
+        for p in COMBOS:
+            for L in Ls:
+                rows.append(common.run(ds, p, L, **over_ds))
+    common.print_table(rows)
+    l_ref = sorted(Ls)[len(Ls) // 2]
+    for ds in datasets:
+        at = {r["preset"]: r for r in rows
+              if r["dataset"] == ds and r["L"] == l_ref}
+        print(f"# {ds} L={l_ref} qps: base={at['baseline']['qps']} "
+              f"C1={at['C1']['qps']} C2={at['C2']['qps']} "
+              f"C3={at['C3']['qps']} C5={at['C5']['qps']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

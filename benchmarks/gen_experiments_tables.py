@@ -1,0 +1,81 @@
+"""Regenerate the §Dry-run / §Roofline markdown tables in EXPERIMENTS.md from
+the dry-run artifacts. Usage:
+    PYTHONPATH=src python -m benchmarks.gen_experiments_tables [--tag opt]
+Prints markdown to stdout (EXPERIMENTS.md embeds the output)."""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+from benchmarks.roofline import ART, analyze, load
+
+
+def dryrun_table(mesh_tag, tag=""):
+    rows = load(mesh_tag, tag)
+    out = ["| arch | shape | ok | compile_s | HLO flops/dev | coll GiB/dev | "
+           "args GiB | temp GiB |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if not r.get("ok"):
+            out.append(f"| {r['arch']} | {r['shape']} | FAIL | | | | | |")
+            continue
+        coll = sum(v for k, v in r["collectives"].items()
+                   if not k.endswith("count"))
+        out.append(
+            f"| {r['arch']} | {r['shape']} | ok | {r['compile_s']} | "
+            f"{r['flops']:.2e} | {coll/2**30:.2f} | "
+            f"{r['memory']['argument_bytes']/2**30:.1f} | "
+            f"{r['memory']['temp_bytes']/2**30:.1f} |")
+    return "\n".join(out)
+
+
+def roofline_table(mesh_tag, tag=""):
+    rows = analyze(mesh_tag, tag)
+    out = ["| arch | shape | compute s | memory s (model) | memory s "
+           "(HLO ub) | collective s | dominant | MODEL/HLO flops | roofline "
+           "fraction |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if "error" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | FAIL | | | | | | |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']} | "
+            f"{r['memory_s_model']} | {r['memory_s_hlo_ub']} | "
+            f"{r['collective_s']} | {r['dominant']} | {r['useful_ratio']} | "
+            f"{r['roofline_fraction']} |")
+    return "\n".join(out)
+
+
+def compare_table(mesh_tag="single"):
+    """Baseline vs optimized roofline fractions per cell."""
+    base = {(r["arch"], r["shape"]): r for r in analyze(mesh_tag, "")
+            if "error" not in r}
+    opt = {(r["arch"], r["shape"]): r for r in analyze(mesh_tag, "opt")
+           if "error" not in r}
+    out = ["| arch | shape | coll s before | coll s after | fraction before "
+           "| fraction after | gain |",
+           "|---|---|---|---|---|---|---|"]
+    for k in sorted(base):
+        b = base[k]
+        o = opt.get(k)
+        if not o:
+            continue
+        fb, fo = float(b["roofline_fraction"]), float(o["roofline_fraction"])
+        out.append(
+            f"| {k[0]} | {k[1]} | {b['collective_s']} | {o['collective_s']} "
+            f"| {fb:.3f} | {fo:.3f} | {fo/max(fb,1e-9):.1f}x |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    tag = "opt" if "--tag" in sys.argv and "opt" in sys.argv else ""
+    for mesh in ("single", "multi"):
+        print(f"\n### Dry-run ({mesh}-pod{', ' + tag if tag else ''})\n")
+        print(dryrun_table(mesh, tag))
+        print(f"\n### Roofline ({mesh}-pod{', ' + tag if tag else ''})\n")
+        print(roofline_table(mesh, tag))
+    if (ART / "dryrun_opt").exists():
+        print("\n### Baseline vs optimized (single-pod)\n")
+        print(compare_table("single"))

@@ -1,0 +1,39 @@
+"""Eq. 1 validation: measured page reads vs the model R*H/(OR(G)*n_p)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import get_preset, overlap_ratio
+
+from benchmarks import common
+
+
+def main(dataset="sift-like", Ls=(16, 24, 32, 48, 64, 96)):
+    ds = common.dataset(dataset)
+    G, _, _ = common.graph(dataset)
+    rbar = float((G >= 0).sum(1).mean())
+    rows, xs, ys = [], [], []
+    for preset in ("baseline", "pageshuffle"):
+        idx = common.index(dataset, preset)
+        og = overlap_ratio(idx.layout, G)
+        n_p = idx.layout.n_p
+        for L in Ls:
+            cfg = get_preset(preset, L=L)
+            res = idx.search(ds.queries, cfg)
+            h = float(res.hops.mean())
+            model = rbar * h / (max(og, 1.0 / n_p) * n_p)
+            measured = float(res.page_reads.mean())
+            xs.append(model)
+            ys.append(measured)
+            rows.append({"preset": preset, "L": L, "OR": round(og, 4),
+                         "n_p": n_p, "hops": round(h, 1),
+                         "model_pages": round(model, 1),
+                         "measured_pages": round(measured, 1)})
+    corr = float(np.corrcoef(xs, ys)[0, 1])
+    common.print_table(rows)
+    print(f"# Eq.1 model-vs-measured correlation r={corr:.3f}")
+    return corr
+
+
+if __name__ == "__main__":
+    main()

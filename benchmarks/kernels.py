@@ -1,0 +1,55 @@
+"""Kernel microbench: interpret-mode wall time (CPU, correctness path) plus
+the ANALYTIC v5e numbers the kernel is designed for (HBM-bound page_scan,
+MXU-bound pq_adc) — the dry-run/roofline methodology at kernel granularity."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import page_scan, pq_adc
+
+HBM_BW = 819e9
+PEAK = 197e12
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters * 1e6
+
+
+def main():
+    rng = np.random.default_rng(0)
+    print("name,us_per_call,derived")
+    # page_scan: W=16 pages of (8,128) vs 128 queries
+    pages = jnp.asarray(rng.normal(size=(1024, 8, 128)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, 1024, 16).astype(np.int32))
+    q = jnp.asarray(rng.normal(size=(128, 128)).astype(np.float32))
+    us = _time(page_scan, pages, ids, q)
+    bytes_moved = 16 * 8 * 128 * 4
+    flops = 2 * 16 * 8 * 128 * 128
+    t_mem = bytes_moved / HBM_BW * 1e6
+    t_mxu = flops / PEAK * 1e6
+    print(f"page_scan_16x8x128_q128,{us:.1f},"
+          f"v5e_mem_us={t_mem:.3f};v5e_mxu_us={t_mxu:.3f};bound="
+          f"{'memory' if t_mem > t_mxu else 'compute'}")
+    # pq_adc: 64k codes x M=16
+    codes = jnp.asarray(rng.integers(0, 256, (65536, 16)).astype(np.uint8))
+    lut = jnp.asarray(rng.normal(size=(16, 256)).astype(np.float32))
+    us = _time(pq_adc, codes, lut)
+    bytes_moved = 65536 * 16
+    flops = 2 * 65536 * 16 * 256  # one-hot matmul form
+    print(f"pq_adc_64k_m16,{us:.1f},"
+          f"v5e_mem_us={bytes_moved / HBM_BW * 1e6:.3f};"
+          f"v5e_mxu_us={flops / PEAK * 1e6:.3f}")
+    return 0
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Paper Fig. 2: I/O vs compute share of query latency per dataset."""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def main(datasets=("sift-like", "deep-like", "spacev-like", "gist-like"),
+         L=48):
+    rows = []
+    for ds in datasets:
+        over = {"page_bytes": 16384} if ds == "gist-like" else {}
+        r = common.run(ds, "baseline", L, **over)
+        rows.append({"dataset": ds, "io_fraction": r["io_fraction"],
+                     "compute_fraction": round(1 - r["io_fraction"], 3),
+                     "mean_latency_us": r["mean_latency_us"]})
+    common.print_table(rows)
+    ios = [r["io_fraction"] for r in rows]
+    print(f"# I/O dominates: {min(ios):.2f}..{max(ios):.2f} "
+          "(paper reports 0.70-0.90 at 100M scale)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

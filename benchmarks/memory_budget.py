@@ -1,0 +1,23 @@
+"""Paper Fig. 15 / Finding 7: PQ-dims vs MemGraph-ratio budget allocation."""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def main(dataset="sift-like", L=48):
+    rows = []
+    for m in (8, 16, 32):
+        r = common.run(dataset, "baseline", L, pq_m=m)
+        r["knob"] = f"pq_m={m}"
+        rows.append(r)
+    for frac in (0.001, 0.01, 0.05):
+        r = common.run(dataset, "memgraph", L, memgraph_frac=frac)
+        r["knob"] = f"mg={frac}"
+        rows.append(r)
+    common.print_table(rows, cols=["knob", "recall@10", "qps",
+                                   "pages_per_query", "hops"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Paper Fig. 23 / Finding 12: page-size trade-off on the high-dimensional
+dataset — PS+PSe is ineffective when a page holds ~1 record."""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def main(dataset="gist-like", Ls=(24, 48)):
+    rows = []
+    for page_bytes in (8192, 16384):
+        for preset in ("baseline", "C1"):
+            for L in Ls:
+                r = common.run(dataset, preset, L, page_bytes=page_bytes)
+                r["page_bytes"] = page_bytes
+                rows.append(r)
+    common.print_table(rows, cols=["page_bytes", "preset", "L", "recall@10",
+                                   "qps", "pages_per_query"])
+    idx8 = common.index(dataset, "baseline", page_bytes=8192)
+    idx16 = common.index(dataset, "baseline", page_bytes=16384)
+    print(f"# n_p: 8KB={idx8.layout.n_p} 16KB={idx16.layout.n_p}; "
+          f"disk: 8KB={idx8.layout.disk_bytes/2**20:.1f}MiB "
+          f"16KB={idx16.layout.disk_bytes/2**20:.1f}MiB")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Paper Figs. 11-13 + Table 5: single-factor Pareto sweeps — QPS / latency /
+I/O-per-query vs Recall@10 for each technique, plus modeled device counters."""
+from __future__ import annotations
+
+from benchmarks import common
+
+PRESETS = ("baseline", "cache", "memgraph", "pageshuffle", "dynamicwidth",
+           "pipeline", "pagesearch")
+LS = (12, 16, 24, 32, 48, 64, 96)
+
+
+def main(datasets=("sift-like", "deep-like", "spacev-like", "gist-like"),
+         presets=PRESETS, Ls=LS):
+    rows = []
+    for ds in datasets:
+        for p in presets:
+            over = {"page_bytes": 16384} if ds == "gist-like" else {}
+            for L in Ls:
+                rows.append(common.run(ds, p, L, **over))
+    common.print_table(rows)
+
+    # Finding 3/4/5 qualitative checks at the mid-grid L
+    l_ref = sorted(Ls)[len(Ls) // 2]
+    for ds in datasets:
+        at = {r["preset"]: r for r in rows if r["dataset"] == ds
+              and r["L"] == l_ref}
+        b = at["baseline"]
+        print(f"# {ds}: baseline pages={b['pages_per_query']} "
+              f"memgraph {at['memgraph']['pages_per_query']} "
+              f"dw {at['dynamicwidth']['pages_per_query']} "
+              f"pipe {at['pipeline']['pages_per_query']} "
+              f"(io_frac={b['io_fraction']})")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Paper Figs. 19-21: OctopusANN vs Starling vs PipeANN vs DiskANN at matched
+Recall@10 = 90% and 95%."""
+from __future__ import annotations
+
+from benchmarks import common
+
+SYSTEMS = ("diskann", "starling", "pipeann", "octopusann")
+
+
+def main(datasets=("sift-like", "deep-like", "spacev-like", "gist-like"),
+         targets=(0.90, 0.95)):
+    rows = []
+    for ds in datasets:
+        over = {"page_bytes": 16384} if ds == "gist-like" else {}
+        for target in targets:
+            qps = {}
+            for sysname in SYSTEMS:
+                q, at = common.qps_at_recall(ds, sysname, target, **over)
+                qps[sysname] = q
+                rows.append({"dataset": ds, "target_recall": target,
+                             "system": sysname, "qps_at_recall": round(q, 1),
+                             "pages_per_query": at["pages_per_query"] if at else "",
+                             })
+            if qps["diskann"] > 0:
+                print(f"# {ds} @R{int(target*100)}: octopus/diskann = "
+                      f"{qps['octopusann']/max(qps['diskann'],1e-9):.2f}x, "
+                      f"octopus/starling = "
+                      f"{qps['octopusann']/max(qps['starling'],1e-9):.2f}x")
+    common.print_table(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+#!/usr/bin/env python
+"""Quickstart: build an OctopusANN index and search it.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds a small disk-layout index over a synthetic dataset, runs the paper's
+baseline (DiskANN-style, PQ-filtered beam search) and the full composition
+OctopusANN (PQ + MemGraph + PageShuffle + PageSearch + DynamicWidth), and
+prints recall / page-I/O / modeled-QPS for both.
+"""
+import time
+
+from repro.core import (SSDModel, build_index, get_preset, make_dataset,
+                        recall_at_k, summarize)
+
+
+def main():
+    print("generating dataset (sift-like, n=4096) ...")
+    ds = make_dataset("sift-like", n=4096, nq=128)
+
+    print("building Vamana graph + baseline index ...")
+    t0 = time.time()
+    base = build_index(ds, get_preset("baseline"), R=24, L_build=48)
+    print(f"  built in {time.time()-t0:.1f}s   "
+          f"OR(G)={base.build_stats['overlap_ratio']:.4f} "
+          f"records/page={base.build_stats['n_p']}")
+
+    print("building OctopusANN index (adds shuffle + memgraph) ...")
+    octo = build_index(ds, get_preset("octopusann", memgraph_frac=0.02),
+                       graph=base.graph, medoid_id=base.medoid)
+
+    model = SSDModel()
+    for name, idx in [("baseline(DiskANN-style)", base), ("OctopusANN", octo)]:
+        cfg = idx.cfg.replace(L=48)
+        res = idx.search(ds.queries, cfg)
+        rec = recall_at_k(res.ids, ds.gt, 10)
+        s = summarize(model, res, d=ds.d, pq_m=cfg.pq_m,
+                      page_bytes=cfg.page_bytes)
+        print(f"{name:24s} recall@10={rec:.3f} "
+              f"pages/q={s['mean_pages_per_query']:6.1f} "
+              f"QPS={s['qps']:8.0f} latency={s['mean_latency_us']:7.1f}us "
+              f"io_frac={s['io_fraction']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

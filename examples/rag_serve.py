@@ -1,0 +1,60 @@
+#!/usr/bin/env python
+"""RAG serving: OctopusANN retrieval feeding an LM decode loop.
+
+    PYTHONPATH=src python examples/rag_serve.py [--arch tinyllama-1.1b]
+
+End-to-end serving path: a corpus of synthetic passages is embedded (toy
+projection), indexed with OctopusANN; each query retrieves top-k passages
+whose tokens are prepended to the prompt, and the selected --arch backbone
+(reduced config) decodes the answer with its KV cache. The retrieval I/O
+metrics and decode throughput are reported separately.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import build_index, get_preset, make_dataset
+from repro.models import init_params
+from repro.serving.engine import LMServer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--queries", type=int, default=8)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    print("== retrieval side (the paper's system) ==")
+    ds = make_dataset("deep-like", n=4096, nq=args.queries)
+    idx = build_index(ds, get_preset("octopusann", memgraph_frac=0.02),
+                      R=24, L_build=48)
+    t0 = time.time()
+    res = idx.search(ds.queries)
+    print(f"retrieved top-10 for {args.queries} queries in "
+          f"{time.time()-t0:.2f}s wall; pages/q={res.page_reads.mean():.1f} "
+          f"hops={res.hops.mean():.1f}")
+
+    print(f"== generation side ({args.arch}, reduced config) ==")
+    cfg = get_smoke_config(args.arch)
+    params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    server = LMServer(params, cfg, max_len=256)
+    # toy RAG contract: retrieved passage ids become context token prefixes
+    rng = np.random.default_rng(0)
+    question = rng.integers(1, cfg.vocab_size, (args.queries, 8))
+    context = (res.ids[:, :8] % cfg.vocab_size).astype(np.int64)
+    prompts = np.concatenate([context, question], axis=1).astype(np.int32)
+    t0 = time.time()
+    out = server.generate(prompts, new_tokens=args.new_tokens)
+    dt = time.time() - t0
+    print(f"decoded {args.queries}x{args.new_tokens} tokens in {dt:.2f}s "
+          f"({args.queries*args.new_tokens/dt:.1f} tok/s on 1 CPU core)")
+    print("sample output tokens:", out[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Fixed-size candidate-list primitives shared by the Vamana builder, the
+MemGraph navigator and the disk-page search engine.
+
+Everything is shape-static and jit/vmap-friendly. The candidate list is the
+DiskANN search pool: ids sorted by ranking key, each entry carrying
+(expanded?, exact-distance-known?) flags. Deduplication uses a segmented
+min/or scan over id-sorted runs (exact for runs <= 64, far above anything the
+engine produces).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+SENTINEL = jnp.int32(2 ** 30)  # padding id; sorts after every real id
+INF = jnp.float32(3e38)
+
+
+def sq_dists(q, X):
+    """q (d,) or (B,d); X (..., d) -> squared L2."""
+    diff = q[..., None, :] - X
+    return jnp.sum(jnp.square(diff), axis=-1)
+
+
+def _segmented_min_or(ids, keys, flags):
+    """ids sorted ascending. Within equal-id runs: min over keys (per column)
+    and OR over flags (per column). log-shift passes, exact for runs <= 64."""
+    n = ids.shape[0]
+    # suffix-scan within runs. ids are sorted, so ids[i]==ids[i+shift] implies
+    # the whole window is one run — doubling shifts therefore implement an
+    # exact segmented min/or for ANY run length in ceil(log2 n) passes. The
+    # FIRST element of each run accumulates the run and is the one
+    # dedup_merge_topL keeps.
+    shift = 1
+    while shift < n:
+        same = jnp.concatenate(
+            [ids[:-shift] == ids[shift:], jnp.zeros((shift,), bool)])
+        sk = jnp.concatenate([keys[shift:],
+                              jnp.full((shift,) + keys.shape[1:], INF)])
+        keys = jnp.where(same[:, None], jnp.minimum(keys, sk), keys)
+        sf = jnp.concatenate([flags[shift:],
+                              jnp.zeros((shift,) + flags.shape[1:], bool)])
+        flags = jnp.where(same[:, None], flags | sf, flags)
+        shift *= 2
+    return keys, flags
+
+
+def dedup_merge_topL(ids, keys, flags, L):
+    """ids (N,) int32 (SENTINEL padding); keys (N, K) f32 — column 0 is the
+    ranking key; flags (N, F) bool. Returns (ids, keys, flags) of length L:
+    unique ids, best (min) keys / OR'd flags per id, sorted by keys[:,0].
+    """
+    order = jnp.argsort(ids)
+    ids, keys, flags = ids[order], keys[order], flags[order]
+    keys, flags = _segmented_min_or(ids, keys, flags)
+    first = jnp.concatenate([jnp.ones((1,), bool), ids[1:] != ids[:-1]])
+    rank_key = jnp.where(first & (ids < SENTINEL), keys[:, 0], INF)
+    order2 = jnp.argsort(rank_key)[:L]
+    out_ids = jnp.where(rank_key[order2] < INF, ids[order2], SENTINEL)
+    return out_ids, keys[order2], flags[order2]
+
+
+def top_w_unexpanded(keys0, expanded, valid, w_static, w_dynamic=None):
+    """Select indices of the best w unexpanded valid candidates.
+    Returns (idx (w_static,), active (w_static,) bool). w_dynamic (traced
+    scalar <= w_static) masks the selection width at runtime (DynamicWidth).
+    """
+    masked = jnp.where(valid & ~expanded, keys0, INF)
+    idx = jnp.argsort(masked)[:w_static]
+    active = masked[idx] < INF
+    if w_dynamic is not None:
+        active = active & (jnp.arange(w_static) < w_dynamic)
+    return idx, active

@@ -1,0 +1,1 @@
+from repro.kernels.ops import page_scan, pq_adc

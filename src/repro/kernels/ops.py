@@ -1,0 +1,26 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On this CPU container the kernels execute in interpret mode (the kernel body
+runs as Python/jnp per grid step); on a real TPU set interpret=False (the
+default flips automatically on TPU backends).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.page_scan import page_scan as _page_scan
+from repro.kernels.pq_adc import pq_adc as _pq_adc
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def page_scan(pages, page_ids, q):
+    """Fused page-fetch + score-all-residents (PageSearch+Pipeline on TPU)."""
+    return _page_scan(pages, page_ids, q, interpret=not _on_tpu())
+
+
+def pq_adc(codes, lut, block_n=512):
+    """ADC LUT scan over PQ codes (memory-layout PQ filter)."""
+    return _pq_adc(codes, lut, block_n=block_n, interpret=not _on_tpu())

@@ -1,0 +1,54 @@
+"""pq_adc — MXU-native ADC (asymmetric distance computation) LUT scan.
+
+The paper's PQ filter (§4.1.1) scans memory-resident codes against a per-query
+lookup table. A CPU implementation gathers lut[m, code]; gathers are the weak
+operation on TPU's vector unit, so the TPU-native form turns each subspace
+scan into a one-hot (bn, 256) x (256,) matmul on the MXU — gather-free and
+sublane-aligned. The LUT (M, 256) f32 = 16 KiB lives wholly in VMEM; codes
+stream from HBM block-by-block through the grid pipeline (double-buffered).
+
+Tiling contract: block_n multiple of 8 (sublanes); 256 = 2 lanes of 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(codes_ref, lut_ref, out_ref):
+    codes = codes_ref[...]                                # (bn, M) uint8
+    lut = lut_ref[...]                                    # (M, 256) f32
+    bn, m = codes.shape
+    acc = jnp.zeros((bn,), jnp.float32)
+    for j in range(m):  # M is small and static: unrolled, each an MXU matmul
+        onehot = (codes[:, j][:, None].astype(jnp.int32)
+                  == jax.lax.broadcasted_iota(jnp.int32, (bn, 256), 1))
+        acc = acc + jnp.dot(onehot.astype(jnp.float32), lut[j],
+                            preferred_element_type=jnp.float32)
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def pq_adc(codes, lut, *, block_n=512, interpret=True):
+    """codes (N, M) uint8; lut (M, 256) f32 -> (N,) f32."""
+    n, m = codes.shape
+    pad = (-n) % block_n
+    if pad:
+        codes = jnp.pad(codes, ((0, pad), (0, 0)))
+    np_ = codes.shape[0]
+    out = pl.pallas_call(
+        _kernel,
+        grid=(np_ // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, m), lambda i: (i, 0)),
+            pl.BlockSpec((m, 256), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), jnp.float32),
+        interpret=interpret,
+    )(codes, lut)
+    return out[:n]

@@ -1,0 +1,25 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness reference for
+every shape/dtype sweep in tests/test_kernels.py)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def page_scan_ref(pages, page_ids, q):
+    """pages (P, n_p, d); page_ids (W,) int32; q (Q, d).
+    Returns dists (W, n_p, Q) f32: squared L2 from every record of every
+    fetched page to every query."""
+    gathered = pages[page_ids]                                   # (W, n_p, d)
+    g = gathered.astype(jnp.float32)
+    qf = q.astype(jnp.float32)
+    x2 = jnp.sum(jnp.square(g), -1)[..., None]                   # (W,n_p,1)
+    q2 = jnp.sum(jnp.square(qf), -1)[None, None, :]              # (1,1,Q)
+    xq = jnp.einsum("wnd,qd->wnq", g, qf)
+    return x2 - 2.0 * xq + q2
+
+
+def pq_adc_ref(codes, lut):
+    """codes (N, M) uint8; lut (M, 256) f32 -> dists (N,) f32 (ADC scan)."""
+    m = lut.shape[0]
+    gathered = jnp.take_along_axis(lut.T, codes.astype(jnp.int32), axis=0)
+    return jnp.sum(gathered, axis=-1)

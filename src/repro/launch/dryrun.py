@@ -1,0 +1,274 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST be the very first lines — jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x mesh)
+cell on the production mesh and record roofline inputs.
+
+For each cell this writes benchmarks/artifacts/dryrun/<mesh>/<arch>__<shape>.json
+with:
+  - compiled.cost_analysis()  (per-device HLO FLOPs / bytes accessed)
+  - compiled.memory_analysis() (argument/output/temp/peak bytes per device)
+  - per-category collective bytes parsed from the post-SPMD HLO
+  - compile wall time, HLO op histogram
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh single --arch all --shape all
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh multi  ...
+  (--force to recompute cached artifacts; --tag to write an alternative
+   artifact set, used by the perf hillclimb)
+"""
+import argparse
+import functools
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCH_IDS, SHAPE_NAMES, applicable_shapes,
+                           get_config, get_shape)
+from repro.launch.mesh import make_production_mesh
+from repro.models import abstract_params, decode_step, input_specs, loss_fn, prefill_step
+from repro.parallel.api import ParallelContext
+from repro.parallel import sharding as sh
+from repro.training import optim
+
+ART_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts" / "dryrun"
+
+_COLL_RE = re.compile(
+    r"\b(f8e4m3fn|f8e5m2|bf16|f16|f32|f64|s4|s8|s16|s32|s64|u8|u16|u32|u64|pred)"
+    r"\[([\d,]*)\][^=]*\b"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)\b")
+_DTYPE_BYTES = {"f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4,
+                "f64": 8, "s4": 1, "s8": 1, "s16": 2, "s32": 4, "s64": 8,
+                "u8": 1, "u16": 2, "u32": 4, "u64": 8, "pred": 1}
+
+
+def parse_collectives(hlo_text: str):
+    """Per-device bytes by collective category from post-SPMD HLO.
+    Result-shape bytes; -start/-done pairs counted once (via -start)."""
+    out = {}
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        dt, dims, kind = m.groups()
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        b = n * _DTYPE_BYTES[dt]
+        out[kind] = out.get(kind, 0) + b
+        out.setdefault(kind + "_count", 0)
+        out[kind + "_count"] += 1
+    return out
+
+
+def pick_profile(cfg, shape) -> str:
+    """Auto parallelism profile (§Perf iterations, EXPERIMENTS.md):
+      - train/prefill of sub-8B dense models  -> "fsdp" (pure ZeRO-3)
+      - decode when a 16-way TP shard fits    -> "tp"   (no per-token weight
+                                                          gathers over data)
+      - everything else                        -> "2d"  (FSDP x TP)
+    Override with REPRO_PROFILE=2d|fsdp|tp."""
+    env = os.environ.get("REPRO_PROFILE")
+    if env:
+        return env
+    if (shape.mode == "train" and cfg.moe is None
+            and cfg.param_count() < 8e9):
+        return "fsdp"
+    if (shape.mode == "prefill" and cfg.moe is None
+            and cfg.param_count() < 8e9
+            and (cfg.is_attention_free or cfg.num_kv_heads < 16)):
+        # full-MHA archs (stablelm-3b kv=32) prefill better under 2d TP —
+        # measured §Perf prefill iteration
+        return "fsdp"
+    if shape.mode == "decode" and cfg.param_count() * 2 / 16 < 4e9:
+        return "tp"
+    return "2d"
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, include_optimizer=True):
+    """Returns (jitted_fn, kwargs_of_ShapeDtypeStructs)."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    # sequence parallelism pays when the gathered K/V inside attention is
+    # smaller than the (B,S,D) all-reduce it replaces — i.e. GQA (kv<heads),
+    # attention-free mixers, or models small enough that gathers are noise.
+    # Full-MHA stablelm-3b measured 0.6x under seq-shard (§Perf).
+    seq_shard = (cfg.moe is None
+                 and (cfg.is_attention_free
+                      or cfg.num_kv_heads < cfg.num_heads
+                      or cfg.param_count() < 1e9))
+    ctx = ParallelContext(
+        mesh, profile=pick_profile(cfg, shape),
+        gather_quant=os.environ.get("REPRO_GATHER_QUANT", "0") == "1",
+        seq_shard=seq_shard)
+    specs = input_specs(cfg, shape)
+    aparams = abstract_params(cfg)
+    pspec = sh.param_pspecs(ctx, cfg, aparams)
+    p_shard = jax.tree.map(ctx.sharding, pspec)
+    in_pspec = sh.batch_pspecs(ctx, cfg, specs)
+
+    if shape.mode == "train":
+        opt_cfg = optim.for_model(cfg)
+        astate = jax.eval_shape(functools.partial(optim.init_state, opt=opt_cfg),
+                                aparams)
+        spspec = sh.opt_state_pspecs(ctx, cfg, astate, pspec)
+        s_shard = jax.tree.map(ctx.sharding, spspec)
+        b_shard = jax.tree.map(ctx.sharding,
+                               {k: in_pspec[k] for k in specs})
+
+        def train_step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, cfg, batch, parallel=ctx,
+                                       remat_policy=os.environ.get(
+                                           "REPRO_REMAT", "full"))
+            params, opt_state, om = optim.apply_updates(
+                params, grads, opt_state, opt_cfg)
+            return params, opt_state, {"loss": loss, **metrics, **om}
+
+        fn = jax.jit(train_step,
+                     in_shardings=(p_shard, s_shard, b_shard),
+                     out_shardings=(p_shard, s_shard, None),
+                     donate_argnums=(0, 1))
+        args = (aparams, astate, specs)
+        return fn, args, ctx
+
+    if shape.mode == "prefill":
+        b_shard = jax.tree.map(ctx.sharding, {k: in_pspec[k] for k in specs})
+        cache_spec = jax.eval_shape(
+            lambda: __import__("repro.models.transformer", fromlist=["init_cache"]
+                               ).init_cache(cfg, shape.global_batch, shape.seq_len))
+        c_shard = jax.tree.map(ctx.sharding, sh.cache_pspecs(ctx, cfg, cache_spec))
+        logit_shard = ctx.sharding(sh.logits_pspec(ctx, shape.global_batch))
+
+        def pf(params, batch):
+            return prefill_step(params, cfg, batch, parallel=ctx)
+
+        fn = jax.jit(pf, in_shardings=(p_shard, b_shard),
+                     out_shardings=(logit_shard, c_shard))
+        return fn, (aparams, specs), ctx
+
+    # decode
+    cache = specs.pop("cache")
+    c_shard = jax.tree.map(ctx.sharding, sh.cache_pspecs(ctx, cfg, cache))
+    tok_shard = ctx.sharding(in_pspec["tokens"])
+    logit_shard = ctx.sharding(sh.logits_pspec(ctx, shape.global_batch))
+    mrope = specs.get("mrope_positions")
+
+    def dec(params, tokens, cache, cur_index, mrope_positions=None):
+        return decode_step(params, cfg, tokens, cache, cur_index,
+                           parallel=ctx, mrope_positions=mrope_positions)
+
+    in_sh = [p_shard, tok_shard, c_shard, ctx.sharding(jax.sharding.PartitionSpec())]
+    args = [aparams, specs["tokens"], cache, specs["cur_index"]]
+    if mrope is not None:
+        in_sh.append(ctx.sharding(in_pspec["mrope_positions"]))
+        args.append(mrope)
+    fn = jax.jit(dec, in_shardings=tuple(in_sh),
+                 out_shardings=(logit_shard, c_shard),
+                 donate_argnums=(2,))
+    return fn, tuple(args), ctx
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir: Path,
+             force=False):
+    mesh_tag = "multi" if multi_pod else "single"
+    out = out_dir / mesh_tag / f"{arch}__{shape_name}.json"
+    if out.exists() and not force:
+        print(f"[skip cached] {mesh_tag}/{arch}/{shape_name}")
+        return json.loads(out.read_text())
+    out.parent.mkdir(parents=True, exist_ok=True)
+    cfg = get_config(arch)
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+           "params": cfg.param_count(), "active_params": cfg.active_param_count()}
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        fn, args, ctx = build_cell(arch, shape_name, mesh)
+        t1 = time.time()
+        lowered = fn.lower(*args)
+        t2 = time.time()
+        compiled = lowered.compile()
+        t3 = time.time()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        print(f"  memory_analysis[{arch}/{shape_name}]: {mem}")
+        print(f"  cost_analysis[{arch}/{shape_name}]: flops={cost.get('flops')} "
+              f"bytes={cost.get('bytes accessed')}")
+        hlo = compiled.as_text()
+        from repro.parallel.hloanalysis import analyze_hlo
+        ana = analyze_hlo(hlo)
+        rec.update({
+            "ok": True,
+            "lower_s": round(t2 - t1, 2), "compile_s": round(t3 - t2, 2),
+            # raw XLA numbers (while bodies counted ONCE — see hloanalysis.py)
+            "xla_flops_raw": cost.get("flops", 0.0),
+            "xla_bytes_raw": cost.get("bytes accessed", 0.0),
+            # trip-count-corrected per-device numbers
+            "flops": ana["flops"],
+            "traffic_bytes": ana["traffic_bytes"],
+            "collectives": ana["collectives"],
+            "memory": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+                "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            },
+            "n_devices": int(mesh.size),
+        })
+        print(f"[ok] {mesh_tag}/{arch}/{shape_name}: compile={t3-t2:.1f}s "
+              f"flops={rec['flops']:.3e} "
+              f"temp={rec['memory']['temp_bytes']/2**30:.2f}GiB "
+              f"coll={sum(v for k, v in ana['collectives'].items() if not k.endswith('count'))/2**30:.2f}GiB")
+    except Exception as e:  # record failures — they are bugs to fix
+        rec.update({"ok": False, "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-4000:]})
+        print(f"[FAIL] {mesh_tag}/{arch}/{shape_name}: {type(e).__name__}: {e}")
+    rec["total_s"] = round(time.time() - t0, 2)
+    out.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    out_dir = ART_DIR if not args.tag else ART_DIR.parent / f"dryrun_{args.tag}"
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    n_ok = n_fail = n_skip = 0
+    for mp in meshes:
+        for arch in archs:
+            cfg = get_config(arch)
+            shapes = (applicable_shapes(cfg) if args.shape == "all"
+                      else [args.shape])
+            for s in shapes:
+                if s not in applicable_shapes(cfg):
+                    print(f"[n/a] {arch}/{s} (long-context skip, see DESIGN.md)")
+                    n_skip += 1
+                    continue
+                rec = run_cell(arch, s, multi_pod=(mp == "multi"),
+                               out_dir=out_dir, force=args.force)
+                if rec.get("ok"):
+                    n_ok += 1
+                else:
+                    n_fail += 1
+    print(f"\ndry-run done: ok={n_ok} fail={n_fail} skipped-n/a={n_skip}")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

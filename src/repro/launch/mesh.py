@@ -1,0 +1,30 @@
+"""Production mesh factory. A FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) > n:
+        # dry-run host platform exposes 512 placeholder devices; the
+        # single-pod mesh uses the first 256
+        dev = np.asarray(devices[:n]).reshape(shape)
+        return jax.sharding.Mesh(dev, axes)
+    raise RuntimeError(
+        f"need {n} devices for mesh {shape}, have {len(devices)} — the "
+        "dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+        "before any jax import")
+
+
+def make_local_mesh(axes=("data", "model")):
+    """1-device mesh for CPU tests/examples (everything replicated)."""
+    dev = np.asarray(jax.devices()[:1]).reshape((1,) * len(axes))
+    return jax.sharding.Mesh(dev, axes)

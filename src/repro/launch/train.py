@@ -1,0 +1,146 @@
+"""Training launcher: jit'd train step + checkpoint/restart + straggler
+monitor + optional gradient compression. Runs REAL training on this CPU
+container with reduced configs (--smoke) and lowers unchanged for the
+production mesh (launch/dryrun.py proves the full-scale compile).
+
+Fault tolerance drill (used by tests/test_fault_tolerance.py):
+  python -m repro.launch.train --arch tinyllama-1.1b --smoke --steps 60 \
+      --ckpt-dir /tmp/ck --die-at 25        # simulated failure
+  python -m repro.launch.train ... --resume # restarts from step 25
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import statistics
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.models import init_params, loss_fn
+from repro.training import checkpoint as ckpt
+from repro.training import compression, optim
+
+
+class StragglerMonitor:
+    """Flags steps (or, multi-host, peers) slower than 3x the running
+    median — on a real cluster this triggers hot-spare promotion; here it
+    logs and records (the mitigation hook is the same code path)."""
+
+    def __init__(self, factor=3.0, warmup=5):
+        self.times, self.factor, self.warmup = [], factor, warmup
+        self.flagged = 0
+
+    def record(self, dt: float):
+        self.times.append(dt)
+        if len(self.times) > self.warmup:
+            med = statistics.median(self.times[-50:])
+            if dt > self.factor * med:
+                self.flagged += 1
+                print(f"[straggler] step took {dt*1e3:.0f}ms "
+                      f"(median {med*1e3:.0f}ms) — would trigger "
+                      f"re-assignment on a cluster")
+
+
+def make_train_step(cfg, opt_cfg, compress=False, accum=1):
+    @jax.jit
+    def step_fn(params, opt_state, err_state, batch):
+        if accum > 1:
+            from repro.training.accumulate import accumulated_grads
+            (loss, metrics), grads = accumulated_grads(
+                lambda p, b: loss_fn(p, cfg, b, remat_policy="none"),
+                params, batch, accum)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, cfg, batch,
+                                       remat_policy="none")
+        if compress:
+            grads, err_state = compression.ef_compress_tree(grads, err_state)
+        params, opt_state, om = optim.apply_updates(
+            params, grads, opt_state, opt_cfg)
+        return params, opt_state, err_state, {"loss": loss, **om}
+
+    return step_fn
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--accum", type=int, default=1,
+                    help="gradient accumulation microbatches")
+    ap.add_argument("--die-at", type=int, default=-1,
+                    help="simulate a node failure at this step")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--metrics-out", default="")
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    opt_cfg = optim.for_model(cfg, lr=args.lr, warmup_steps=10,
+                              total_steps=args.steps)
+    params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    opt_state = optim.init_state(params, opt_cfg)
+    err_state = compression.init_error_state(params)
+    step_fn = make_train_step(cfg, opt_cfg, compress=args.compress_grads,
+                              accum=args.accum)
+
+    start = 0
+    if args.resume and args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
+        (params, opt_state), start = ckpt.restore(
+            args.ckpt_dir, (params, opt_state))
+        print(f"[resume] restored step {start} from {args.ckpt_dir}")
+
+    pipe = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size,
+                                    seq_len=args.seq,
+                                    global_batch=args.batch))
+    mon = StragglerMonitor()
+    losses = []
+    for step in range(start, args.steps):
+        if step == args.die_at:
+            print(f"[failure-sim] dying at step {step} (checkpointed "
+                  f"through step {step - step % args.ckpt_every})")
+            sys.exit(42)
+        t0 = time.time()
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch(step).items()}
+        if cfg.frontend == "audio_stub":
+            batch["frames"] = jnp.zeros(
+                (args.batch, cfg.num_frames, cfg.d_model), jnp.float32)
+        if cfg.rope_variant == "mrope":
+            batch["mrope_positions"] = jnp.broadcast_to(
+                jnp.arange(args.seq)[None, None], (3, args.batch, args.seq))
+        params, opt_state, err_state, m = step_fn(
+            params, opt_state, err_state, batch)
+        loss = float(m["loss"])
+        losses.append(loss)
+        mon.record(time.time() - t0)
+        if step % args.log_every == 0:
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"gnorm {float(m['grad_norm']):.3f} "
+                  f"lr {float(m['lr']):.2e}")
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            ckpt.save(args.ckpt_dir, step + 1, (params, opt_state))
+    print(f"done: first loss {losses[0]:.4f} -> last loss {losses[-1]:.4f}")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump({"losses": losses, "start": start,
+                       "straggler_flags": mon.flagged}, f)
+    return losses
+
+
+if __name__ == "__main__":
+    main()

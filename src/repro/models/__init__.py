@@ -1,0 +1,8 @@
+from repro.models.model import (
+    abstract_params,
+    decode_step,
+    input_specs,
+    loss_fn,
+    prefill_step,
+)
+from repro.models.transformer import forward, init_cache, init_params

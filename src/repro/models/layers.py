@@ -1,0 +1,291 @@
+"""Core NN primitives (pure JAX, no flax): norms, RoPE variants, GQA attention
+with blocked (flash-style) softmax, dense MLPs.
+
+Parameters are plain nested dicts of jnp arrays; init fns are pure so the
+full-size configs can be materialized as ShapeDtypeStructs via jax.eval_shape
+in the dry-run without allocating.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# init helpers
+
+
+def _dense_init(key, in_dim, out_dim, dtype):
+    scale = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+
+
+def _embed_init(key, vocab, dim, dtype):
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+
+
+def init_norm(dim, norm_type, dtype):
+    p = {"scale": jnp.ones((dim,), dtype)}
+    if norm_type == "layernorm":
+        p["bias"] = jnp.zeros((dim,), dtype)
+    return p
+
+
+def apply_norm(p, x, norm_type, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    if norm_type == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+    else:
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32)
+    if norm_type == "layernorm":
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE variants
+#   full  : rotate the whole head_dim (llama)
+#   2d    : rotate only the first half of head_dim (chatglm-style 2d rope)
+#   mrope : qwen2-vl multimodal rope — head_dim split in sections rotated with
+#           (temporal, height, width) position streams
+
+
+def _rope_angles(positions, rot_dim, theta):
+    """positions (..., S) -> (..., S, rot_dim/2) angles."""
+    inv = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+    return positions[..., None].astype(jnp.float32) * inv
+
+
+def _rotate(x, angles):
+    """x (..., S, H, rot_dim) with angles (..., S, rot_dim/2)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(x, positions, variant, theta=10000.0, mrope_sections=(16, 24, 24)):
+    """x: (B, S, H, D). positions: (B, S) int or (3, B, S) for mrope."""
+    if variant == "none":
+        return x
+    d = x.shape[-1]
+    if variant == "full":
+        ang = _rope_angles(positions, d, theta)              # (B,S,d/2)
+        return _rotate(x, ang).astype(x.dtype)
+    if variant == "2d":
+        rot = d // 2
+        xr, xp = x[..., :rot], x[..., rot:]
+        ang = _rope_angles(positions, rot, theta)
+        return jnp.concatenate([_rotate(xr, ang).astype(x.dtype), xp], axis=-1)
+    if variant == "mrope":
+        # positions: (3, B, S); sections over half-dims. qwen2-vl uses
+        # (16, 24, 24) at head_dim 128; scale the same 1:1.5:1.5 split
+        # proportionally for other head dims (smoke configs).
+        half = d // 2
+        secs = list(mrope_sections)
+        if sum(secs) != half:
+            t = max(1, half // 4)
+            h = (half - t) // 2
+            secs = [t, h, half - t - h]
+        ang_full = _rope_angles(positions, d, theta)          # (3,B,S,half)
+        parts, off = [], 0
+        for i, s in enumerate(secs):
+            parts.append(ang_full[i, ..., off:off + s])
+            off += s
+        ang = jnp.concatenate(parts, axis=-1)                 # (B,S,half)
+        return _rotate(x, ang).astype(x.dtype)
+    raise ValueError(variant)
+
+
+# ---------------------------------------------------------------------------
+# attention
+
+
+def init_attention(key, cfg, dtype):
+    d, hd = cfg.d_model, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": _dense_init(ks[0], d, cfg.num_heads * hd, dtype),
+        "wk": _dense_init(ks[1], d, cfg.num_kv_heads * hd, dtype),
+        "wv": _dense_init(ks[2], d, cfg.num_kv_heads * hd, dtype),
+        "wo": _dense_init(ks[3], cfg.num_heads * hd, d, dtype),
+    }
+
+
+def _split_heads(x, n_heads, head_dim):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, head_dim)
+
+
+def blocked_attention(q, k, v, *, causal, q_offset=0, block=1024):
+    """Flash-style streaming-softmax attention, blocked over KV.
+
+    q: (B, Sq, H, D); k/v: (B, Skv, KV, D) with H % KV == 0.
+    Memory is O(Sq x block) per head instead of O(Sq x Skv).
+    Returns (B, Sq, H, D).
+    """
+    b, sq, h, d = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qf = q.reshape(b, sq, kv, g, d).astype(jnp.float32)
+    scale = 1.0 / math.sqrt(d)
+
+    nblk = (skv + block - 1) // block
+    pad = nblk * block - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(b, nblk, block, kv, d)
+    vb = v.reshape(b, nblk, block, kv, d)
+
+    q_pos = q_offset + jnp.arange(sq)
+
+    def step(carry, xs):
+        acc, m, l = carry
+        kj, vj, j = xs
+        kv_pos = j * block + jnp.arange(block)
+        s = jnp.einsum("bqkgd,bckd->bkgqc", qf, kj.astype(jnp.float32)) * scale
+        if causal:
+            mask = kv_pos[None, :] <= q_pos[:, None]
+        else:
+            mask = jnp.ones((sq, block), bool)
+        mask = jnp.logical_and(mask, (kv_pos < skv)[None, :])
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked rows
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgqc,bckd->bkgqd", p, vj.astype(jnp.float32))
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, kv, g, sq, d), jnp.float32)
+    m0 = jnp.full((b, kv, g, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, kv, g, sq), jnp.float32)
+    kb_t = jnp.moveaxis(kb, 1, 0)
+    vb_t = jnp.moveaxis(vb, 1, 0)
+    # remat each kv-block step: backward recomputes scores/masks instead of
+    # saving (B,KV,G,Sq,block)-sized residuals per block
+    (acc, m, l), _ = jax.lax.scan(
+        jax.checkpoint(step), (acc0, m0, l0), (kb_t, vb_t, jnp.arange(nblk)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 3, 1).reshape(b, sq, h, d)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cur_len):
+    """Single-token attention against a (possibly seq-sharded) KV cache.
+
+    q: (B, 1, H, D); caches: (B, Smax, KV, D); cur_len: scalar int32 —
+    number of valid cache positions (including the token just written).
+    """
+    b, _, h, d = q.shape
+    smax, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    qf = q.reshape(b, kv, g, d).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bckd->bkgc", qf, k_cache.astype(jnp.float32))
+    s = s / math.sqrt(d)
+    mask = jnp.arange(smax) < cur_len
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgc,bckd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def attention_apply(p, x, cfg, *, positions, cache=None, cache_index=None,
+                    kv_override=None, causal=True):
+    """GQA attention. Returns (out, new_cache).
+
+    cache: None (train/prefill, no cache kept) or dict(k, v) of
+    (B, Smax, KV, D) — decode writes at `cache_index` then attends.
+    kv_override: (k, v) already-projected cross-attention KV (whisper).
+    """
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    q = _split_heads(x @ p["wq"], cfg.num_heads, hd)
+    if kv_override is None:
+        k = _split_heads(x @ p["wk"], cfg.num_kv_heads, hd)
+        v = _split_heads(x @ p["wv"], cfg.num_kv_heads, hd)
+        q = apply_rope(q, positions, cfg.rope_variant, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_variant, cfg.rope_theta)
+    else:
+        k, v = kv_override
+
+    extra = None
+    if cache is not None and kv_override is None:
+        # decode: write this token's kv into the cache at cache_index
+        kc = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, cache_index, 0, 0))
+        vc = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, cache_index, 0, 0))
+        extra = {"k": kc, "v": vc}
+        out = decode_attention(q, kc, vc, cache_index + 1)
+    elif cache is not None:
+        out = decode_attention(q, k, v, k.shape[1])  # cross-attn, full source
+        extra = cache
+    else:
+        out = blocked_attention(q, k, v, causal=causal)
+        extra = {"k": k, "v": v}  # projected kv, so prefill can fill a cache
+    out = out.reshape(b, s, cfg.num_heads * hd)
+    return out @ p["wo"], extra
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+
+
+def init_mlp(key, d_model, d_ff, act, dtype):
+    ks = jax.random.split(key, 3)
+    if act == "swiglu":
+        return {
+            "wi": _dense_init(ks[0], d_model, d_ff, dtype),
+            "wg": _dense_init(ks[1], d_model, d_ff, dtype),
+            "wo": _dense_init(ks[2], d_ff, d_model, dtype),
+        }
+    return {
+        "wi": _dense_init(ks[0], d_model, d_ff, dtype),
+        "wo": _dense_init(ks[2], d_ff, d_model, dtype),
+    }
+
+
+def apply_mlp(p, x, act):
+    if act == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    elif act == "gelu":
+        h = jax.nn.gelu(x @ p["wi"])
+    elif act == "relu2":
+        h = jnp.square(jax.nn.relu(x @ p["wi"]))
+    else:
+        raise ValueError(act)
+    return h @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+
+
+def init_embed(key, vocab, dim, dtype):
+    return {"table": _embed_init(key, vocab, dim, dtype)}
+
+
+def sinusoidal_positions(length, dim):
+    pos = np.arange(length)[:, None]
+    i = np.arange(dim // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * i / dim)
+    emb = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(emb, jnp.float32)

@@ -1,0 +1,93 @@
+"""Public model API: init / loss / train-prefill-decode steps / input_specs.
+
+`input_specs(cfg, shape)` returns ShapeDtypeStruct stand-ins for every model
+input of the given (arch x shape) cell — weak-type-correct, shardable, no
+device allocation — consumed by the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.transformer import forward, init_cache, init_params
+
+
+def loss_fn(params, cfg, batch, parallel=None, remat_policy="none"):
+    """Next-token cross-entropy + MoE aux loss. batch: dict(tokens (B,S))."""
+    tokens = batch["tokens"]
+    out = forward(params, cfg, tokens, mode="train",
+                  frames=batch.get("frames"),
+                  mrope_positions=batch.get("mrope_positions"),
+                  parallel=parallel, remat_policy=remat_policy)
+    logits = out["logits"].astype(jnp.float32)
+    targets = tokens[:, 1:]
+    logits = logits[:, :-1]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    # mask padded-vocab targets (never produced by our pipeline, but safe)
+    ce = (logz - gold).mean()
+    aux = 0.01 * out["aux_loss"]
+    return ce + aux, {"ce": ce, "aux": out["aux_loss"]}
+
+
+def prefill_step(params, cfg, batch, parallel=None):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    cache = init_cache(cfg, b, s)
+    out = forward(params, cfg, tokens, mode="prefill", cache=cache,
+                  frames=batch.get("frames"),
+                  mrope_positions=batch.get("mrope_positions"),
+                  parallel=parallel)
+    # next-token logits from the last position
+    return out["logits"][:, -1], out["cache"]
+
+
+def decode_step(params, cfg, tokens, cache, cur_index, parallel=None,
+                mrope_positions=None):
+    """tokens (B,1) int32; cur_index scalar int32. Returns (logits, cache)."""
+    out = forward(params, cfg, tokens, mode="decode", cache=cache,
+                  cur_index=cur_index, parallel=parallel,
+                  mrope_positions=mrope_positions)
+    return out["logits"][:, -1], out["cache"]
+
+
+# ---------------------------------------------------------------------------
+# dry-run input specs
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg, shape) -> Dict[str, Any]:
+    """ShapeDtypeStructs for every input of (cfg, shape). For decode shapes
+    this includes the KV-cache/SSM-state pytree (input AND output of the
+    step). Modality frontends are stubs: precomputed frame/patch embeddings.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    specs: Dict[str, Any] = {}
+    if shape.mode in ("train", "prefill"):
+        specs["tokens"] = _sds((b, s), jnp.int32)
+        if cfg.frontend == "audio_stub":
+            specs["frames"] = _sds((b, cfg.num_frames, cfg.d_model), jnp.bfloat16)
+        if cfg.rope_variant == "mrope":
+            specs["mrope_positions"] = _sds((3, b, s), jnp.int32)
+    else:  # decode: one new token against a seq_len cache
+        specs["tokens"] = _sds((b, 1), jnp.int32)
+        specs["cur_index"] = _sds((), jnp.int32)
+        cache = jax.eval_shape(lambda: init_cache(cfg, b, s))
+        specs["cache"] = cache
+        if cfg.rope_variant == "mrope":
+            specs["mrope_positions"] = _sds((3, b, 1), jnp.int32)
+    return specs
+
+
+def abstract_params(cfg, dtype=None):
+    """Parameter ShapeDtypeStructs without allocation (for the dry-run)."""
+    return jax.eval_shape(
+        functools.partial(init_params, cfg, dtype=dtype),
+        jax.random.PRNGKey(0))

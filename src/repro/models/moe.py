@@ -1,0 +1,189 @@
+"""Expert-parallel Mixture-of-Experts.
+
+Design (see DESIGN.md §5):
+  - experts sharded over the `model` mesh axis (EP); expert d_ff additionally
+    sharded over `data` (FSDP) and — for the 1T-class config — expert d_model
+    over `pod`. Weights are all-gathered per layer inside the shard_map body
+    (classic FSDP), which shows up honestly in the collective roofline term.
+  - tokens stay sharded over the data axes and are *replicated* along `model`,
+    so dispatch needs no all-to-all: each device scatters its local tokens
+    into buffers for its local experts, runs the expert FFNs, scatters back,
+    and a single psum over `model` combines partial outputs (same collective
+    volume as a standard TP MLP all-reduce).
+  - sort-based static-capacity dispatch (MaxText-style): no (T, E, C) one-hot
+    dispatch tensor is ever materialized (which would be TBs at 384 experts).
+  - experts padded to a multiple of the EP degree (qwen2-moe: 60 -> 64),
+    padded experts masked to -inf in the router.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import _dense_init, apply_mlp, init_mlp
+
+
+def init_moe(key, cfg, dtype):
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.d_ff_expert, m.padded_experts
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / math.sqrt(d)
+    p = {
+        "router": (jax.random.normal(ks[0], (d, e), jnp.float32) * scale
+                   ).astype(jnp.float32),  # router kept f32 (standard practice)
+        "wi": (jax.random.normal(ks[1], (e, d, f), jnp.float32) * scale).astype(dtype),
+        "wg": (jax.random.normal(ks[2], (e, d, f), jnp.float32) * scale).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (e, f, d), jnp.float32)
+               * (1.0 / math.sqrt(f))).astype(dtype),
+    }
+    if m.num_shared_experts:
+        p["shared"] = init_mlp(ks[4], d, f * m.num_shared_experts, cfg.act, dtype)
+    return p
+
+
+def _capacity(tokens_local: int, m) -> int:
+    c = int(math.ceil(tokens_local * m.top_k * m.capacity_factor / m.padded_experts))
+    c = max(8, ((c + 7) // 8) * 8)
+    # no point exceeding the worst case (every token to one expert)
+    return min(c, ((tokens_local * m.top_k + 7) // 8) * 8)
+
+
+def _dispatch_local(x2, top_idx, gates, wi, wg, wo, *, e_off, e_loc, cap,
+                    psum_axes=()):
+    """Per-device expert compute. x2 (T, D); top_idx/gates (T, K);
+    wi/wg (e_loc, D, F), wo (e_loc, F, D) — already gathered to full D/F."""
+    t, d = x2.shape
+    k = top_idx.shape[1]
+    flat_e = top_idx.reshape(-1)
+    flat_g = gates.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(t), k)
+
+    local = (flat_e >= e_off) & (flat_e < e_off + e_loc)
+    le = jnp.where(local, flat_e - e_off, e_loc)          # e_loc == drop bucket
+    order = jnp.argsort(le)                                # stable group-by-expert
+    le_s, tok_s, g_s = le[order], flat_t[order], flat_g[order]
+
+    # rank within expert group: position - group start
+    starts = jnp.searchsorted(le_s, jnp.arange(e_loc + 1))
+    pos = jnp.arange(t * k) - starts[jnp.clip(le_s, 0, e_loc)]
+    ok = (le_s < e_loc) & (pos < cap)
+    slot = jnp.where(ok, le_s * cap + pos, e_loc * cap)    # overflow row dropped
+
+    # Keep all (T*K, D)-sized intermediates out of memory: map slots -> token
+    # ids / gate weights first, then gather/scatter in compact slot space.
+    n_slot = e_loc * cap
+    tok_for_slot = jnp.full((n_slot + 1,), t, jnp.int32).at[slot].set(
+        tok_s.astype(jnp.int32))[:-1]
+    gate_for_slot = jnp.zeros((n_slot + 1,), x2.dtype).at[slot].set(
+        jnp.where(ok, g_s, 0.0).astype(x2.dtype))[:-1]
+    x_pad = jnp.concatenate([x2, jnp.zeros((1, d), x2.dtype)], axis=0)
+    h = x_pad[jnp.minimum(tok_for_slot, t)].reshape(e_loc, cap, d)
+
+    up = jnp.einsum("ecd,edf->ecf", h, wi.astype(x2.dtype))
+    gate = jnp.einsum("ecd,edf->ecf", h, wg.astype(x2.dtype))
+    act = jax.nn.silu(gate) * up
+    out_e = jnp.einsum("ecf,efd->ecd", act, wo.astype(x2.dtype))
+
+    flat_out = out_e.reshape(n_slot, d) * gate_for_slot[:, None]
+    y = jnp.zeros((t + 1, d), x2.dtype).at[tok_for_slot].add(flat_out)[:-1]
+    for ax in psum_axes:
+        y = jax.lax.psum(y, ax)
+    return y
+
+
+def router_topk(p, x2, m):
+    """Returns (gates (T,K) f32, idx (T,K) i32, aux_loss scalar)."""
+    logits = x2.astype(jnp.float32) @ p["router"]
+    if m.padded_experts > m.num_experts:
+        pad_mask = jnp.arange(m.padded_experts) >= m.num_experts
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, m.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balancing loss (bincount, no (T,E,K) one-hot)
+    counts = jnp.zeros((m.padded_experts,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    f = counts / jnp.maximum(counts.sum(), 1.0)
+    pbar = probs.mean(0)
+    aux = m.num_experts * jnp.sum(f * pbar)
+    return gates, idx, aux
+
+
+def apply_moe(p, x, cfg, parallel=None):
+    """x (B, S, D) -> (out (B,S,D), aux_loss).
+
+    parallel: repro.parallel.api.ParallelContext or None (single-device path,
+    used by smoke tests and CPU examples).
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    x2 = x.reshape(b * s, d)
+
+    if parallel is None or not parallel.has_axis("model"):
+        gates, idx, aux = router_topk(p, x2, m)
+        gates = gates.astype(x.dtype)
+        y = _dispatch_local(
+            x2, idx, gates, p["wi"], p["wg"], p["wo"],
+            e_off=0, e_loc=m.padded_experts,
+            cap=_capacity(b * s, m))
+    else:
+        mesh = parallel.mesh
+        ep = mesh.shape["model"]
+        e_loc = m.padded_experts // ep
+        dp_axes = parallel.batch_axes(b)   # axes the batch is sharded over
+        dp_size = parallel.axes_size(dp_axes)
+        t_loc = (b * s) // dp_size
+        cap = _capacity(t_loc, m)
+        waxes = parallel.moe_weight_axes(cfg)   # dict: d_model/d_ff -> axis|None
+
+        tok_spec = P(dp_axes if dp_axes else None, None)
+        wi_spec = P("model", waxes["d_model"], waxes["d_ff"])
+        wo_spec = P("model", waxes["d_ff"], waxes["d_model"])
+
+        quant = getattr(parallel, "gather_quant", False)
+
+        def gather(w, ax_name, ax):
+            """FSDP weight gather, optionally in fp8 (halves the wire bytes
+            of the dominant kimi-1T collective — §Perf kimi iteration)."""
+            if quant:
+                w8 = w.astype(jnp.float8_e4m3fn)
+                w8 = jax.lax.all_gather(w8, ax_name, axis=ax, tiled=True)
+                return w8.astype(w.dtype)
+            return jax.lax.all_gather(w, ax_name, axis=ax, tiled=True)
+
+        def body(x2_l, router_l, wi_l, wg_l, wo_l):
+            # router + top_k on LOCAL tokens (§Perf kimi iteration 2:
+            # hoisting it outside shard_map made GSPMD all-gather the
+            # (tokens, E) probs — 91.5 GiB/step on kimi)
+            gates_l, idx_l, aux_l = router_topk({"router": router_l}, x2_l, m)
+            gates_l = gates_l.astype(x2_l.dtype)
+            if dp_axes:
+                aux_l = jax.lax.pmean(aux_l, dp_axes)
+            e_off = jax.lax.axis_index("model") * e_loc
+            # FSDP gather of this layer's expert weights
+            if waxes["d_ff"] is not None:
+                wi_l = gather(wi_l, waxes["d_ff"], 2)
+                wg_l = gather(wg_l, waxes["d_ff"], 2)
+                wo_l = gather(wo_l, waxes["d_ff"], 1)
+            if waxes["d_model"] is not None:
+                wi_l = gather(wi_l, waxes["d_model"], 1)
+                wg_l = gather(wg_l, waxes["d_model"], 1)
+                wo_l = gather(wo_l, waxes["d_model"], 2)
+            y_l = _dispatch_local(
+                x2_l, idx_l, gates_l, wi_l, wg_l, wo_l,
+                e_off=e_off, e_loc=e_loc, cap=cap, psum_axes=("model",))
+            return y_l, aux_l
+
+        y, aux = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(tok_spec, P(None, None), wi_spec, wi_spec, wo_spec),
+            out_specs=(tok_spec, P()),
+            check_vma=False,
+        )(x2, p["router"], p["wi"], p["wg"], p["wo"])
+
+    if m.num_shared_experts:
+        y = y + apply_mlp(p["shared"], x2, cfg.act)
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,275 @@
+"""Attention-free sequence mixers: RWKV6 (Finch) and Mamba selective scan.
+
+Both use a *chunked parallel* form: within a chunk of length C the recurrence
+is evaluated with dense (MXU-shaped) matmuls in log-decay space; across chunks
+a `lax.scan` carries the recurrent state. This keeps HLO size independent of
+sequence length and the live working set O(B * C * state) instead of
+O(B * S * state) — the reason jamba/rwkv6 can run the long_500k shape.
+
+RWKV6 keeps the Finch hallmark — *data-dependent decay* w_t produced by a
+low-rank MLP — with static token-shift mixing coefficients (one shared LoRA
+for the decay only; the five-way per-channel LoRA mixes of the full release
+are simplified, as noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _dense_init, apply_norm, init_norm
+
+# RWKV chunk numerics: the matmul chunk form rescales keys by exp(-cumsum
+# log decay); the cumsum is clamped at +/-60 (safe in f32) and the default
+# chunk is kept small enough that typical decays stay inside the range —
+# pairs that straddle the clamp correspond to contributions <= e^-60.
+# (Mamba needs no clamp: its chunk scan is an exact linear-space
+# associative scan.)
+_LOG_CLIP = 60.0
+
+
+# ===========================================================================
+# RWKV6 (Finch)
+# ===========================================================================
+
+
+def init_rwkv6(key, cfg, dtype):
+    d = cfg.d_model
+    hk = cfg.ssm.head_dim
+    h = d // hk
+    lora = max(32, d // 32)
+    ks = jax.random.split(key, 12)
+    return {
+        "mu_r": jnp.full((d,), 0.5, dtype), "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_v": jnp.full((d,), 0.5, dtype), "mu_g": jnp.full((d,), 0.5, dtype),
+        "mu_w": jnp.full((d,), 0.5, dtype),
+        "wr": _dense_init(ks[0], d, d, dtype), "wk": _dense_init(ks[1], d, d, dtype),
+        "wv": _dense_init(ks[2], d, d, dtype), "wg": _dense_init(ks[3], d, d, dtype),
+        "wo": _dense_init(ks[4], d, d, dtype),
+        "w_base": jnp.full((d,), -1.0, jnp.float32),
+        "lora_a": _dense_init(ks[5], d, lora, dtype),
+        "lora_b": (jax.random.normal(ks[6], (lora, d), jnp.float32) * 0.01
+                   ).astype(dtype),
+        "u": (jax.random.normal(ks[7], (h, hk), jnp.float32) * 0.1).astype(jnp.float32),
+        "ln_x": init_norm(d, "layernorm", dtype),
+        # channel mix
+        "cm_mu_k": jnp.full((d,), 0.5, dtype), "cm_mu_r": jnp.full((d,), 0.5, dtype),
+        "cm_wk": _dense_init(ks[8], d, cfg.d_ff, dtype),
+        "cm_wv": _dense_init(ks[9], cfg.d_ff, d, dtype),
+        "cm_wr": _dense_init(ks[10], d, d, dtype),
+    }
+
+
+def _shift(x, prev):
+    """Token shift: x_{t-1}; prev (B, D) is the last token of the previous
+    segment (zeros at sequence start)."""
+    return jnp.concatenate(
+        [prev[:, None, :].astype(x.dtype), x[:, :-1, :]], axis=1)
+
+
+def _chunked_wkv(r, k, v, w, u, state, chunk):
+    """r/k/w: (B,S,H,K) f32; v: (B,S,H,V) f32; w in (0,1); u: (H,K).
+    state: (B,H,K,V). Returns (out (B,S,H,V), new_state)."""
+    b, s, h, kk = r.shape
+    vv = v.shape[-1]
+    n = s // chunk
+    rc = r.reshape(b, n, chunk, h, kk)
+    kc = k.reshape(b, n, chunk, h, kk)
+    vc = v.reshape(b, n, chunk, h, vv)
+    lw = jnp.log(jnp.clip(w, 1e-8, 1.0)).reshape(b, n, chunk, h, kk)
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)  # strict lower
+
+    def step(S, xs):
+        rj, kj, vj, lwj = xs                       # (B,C,H,*)
+        cum = jnp.cumsum(lwj, axis=1)              # inclusive log-decay prods
+        cum = jnp.clip(cum, -_LOG_CLIP, 0.0)
+        c_excl = jnp.exp(cum - lwj)                # prod of w_1..w_{t-1}
+        r_t = rj * c_excl
+        k_t = kj * jnp.exp(-cum)
+        # inter-chunk: r~ @ S
+        inter = jnp.einsum("bchk,bhkv->bchv", r_t, S)
+        # intra-chunk (strictly causal)
+        att = jnp.einsum("bchk,bdhk->bhcd", r_t, k_t)
+        att = att * causal[None, None]
+        intra = jnp.einsum("bhcd,bdhv->bchv", att, vj)
+        # diagonal bonus term u
+        bonus = jnp.einsum("bchk,hk,bchk->bch", rj, u, kj)
+        out = inter + intra + bonus[..., None] * vj
+        c_last = jnp.exp(cum[:, -1])               # (B,H,K)
+        S_new = c_last[..., None] * (S + jnp.einsum("bchk,bchv->bhkv", k_t, vj))
+        return S_new, out
+
+    xs = (jnp.moveaxis(rc, 1, 0), jnp.moveaxis(kc, 1, 0),
+          jnp.moveaxis(vc, 1, 0), jnp.moveaxis(lw, 1, 0))
+    state, out = jax.lax.scan(jax.checkpoint(step), state, xs)
+    out = jnp.moveaxis(out, 0, 1).reshape(b, s, h, vv)
+    return out, state
+
+
+def rwkv6_time_mix(p, x, cfg, state):
+    """state: dict(shift (B,D), wkv (B,H,K,V)). Returns (out, new_state)."""
+    b, s, d = x.shape
+    hk = cfg.ssm.head_dim
+    h = d // hk
+    xprev = (_shift(x, state["shift"]) if s > 1
+             else state["shift"][:, None, :].astype(x.dtype))
+
+    def mix(mu):
+        return x + (xprev - x) * mu
+
+    r = mix(p["mu_r"]) @ p["wr"]
+    k = mix(p["mu_k"]) @ p["wk"]
+    v = mix(p["mu_v"]) @ p["wv"]
+    g = mix(p["mu_g"]) @ p["wg"]
+    # Finch data-dependent decay
+    dw = jnp.tanh(mix(p["mu_w"]) @ p["lora_a"]) @ p["lora_b"]
+    w = jnp.exp(-jnp.exp(p["w_base"] + dw.astype(jnp.float32)))  # (B,S,D)
+
+    rh = r.reshape(b, s, h, hk).astype(jnp.float32)
+    kh = k.reshape(b, s, h, hk).astype(jnp.float32)
+    vh = v.reshape(b, s, h, hk).astype(jnp.float32)
+    wh = w.reshape(b, s, h, hk)
+
+    if s == 1:  # decode step: plain recurrence
+        S = state["wkv"]
+        kv = jnp.einsum("bhk,bhv->bhkv", kh[:, 0], vh[:, 0])
+        out = jnp.einsum("bhk,bhkv->bhv", rh[:, 0], S + p["u"][..., None] * kv)
+        S = wh[:, 0][..., None] * S + kv
+        out = out[:, None]
+    else:
+        chunk = min(cfg.ssm.chunk_size, s)
+        assert s % chunk == 0, (s, chunk)
+        out, S = _chunked_wkv(rh, kh, vh, wh, p["u"], state["wkv"], chunk)
+
+    out = out.reshape(b, s, d).astype(x.dtype)
+    out = apply_norm(p["ln_x"], out, "layernorm")
+    out = (out * jax.nn.silu(g)) @ p["wo"]
+    return out, {"shift": x[:, -1, :], "wkv": S}
+
+
+def rwkv6_channel_mix(p, x, state):
+    """state: shift (B, D)."""
+    s = x.shape[1]
+    xprev = (_shift(x, state) if s > 1 else state[:, None, :].astype(x.dtype))
+    xk = x + (xprev - x) * p["cm_mu_k"]
+    xr = x + (xprev - x) * p["cm_mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["cm_wk"]))
+    out = jax.nn.sigmoid(xr @ p["cm_wr"]) * (k @ p["cm_wv"])
+    return out, x[:, -1, :]
+
+
+def rwkv6_state_init(cfg, batch, dtype=jnp.float32):
+    d = cfg.d_model
+    hk = cfg.ssm.head_dim
+    h = d // hk
+    return {
+        "shift_tm": jnp.zeros((batch, d), dtype),
+        "shift_cm": jnp.zeros((batch, d), dtype),
+        "wkv": jnp.zeros((batch, h, hk, hk), jnp.float32),
+    }
+
+
+# ===========================================================================
+# Mamba (selective scan, as used in Jamba)
+# ===========================================================================
+
+
+def init_mamba(key, cfg, dtype):
+    d = cfg.d_model
+    di = d * cfg.ssm.expand
+    n = cfg.ssm.d_state
+    dtr = max(1, math.ceil(d / 16))
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": _dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm.d_conv, di), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": _dense_init(ks[2], di, dtr + 2 * n, dtype),
+        "dt_proj": _dense_init(ks[3], dtr, di, dtype),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32), (di, 1))),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": _dense_init(ks[4], di, d, dtype),
+    }
+
+
+def _causal_conv(x, w, b, conv_state):
+    """Depthwise causal conv. x (B,S,Di), w (K,Di), conv_state (B,K-1,Di)."""
+    kk = w.shape[0]
+    xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(kk))
+    new_state = xp[:, -(kk - 1):, :] if kk > 1 else conv_state
+    return out + b, new_state
+
+
+def mamba_mix(p, x, cfg, state):
+    """state: dict(conv (B,K-1,Di), ssm (B,Di,N)). Returns (out, new_state)."""
+    b, s, d = x.shape
+    di = d * cfg.ssm.expand
+    n = cfg.ssm.d_state
+    dtr = p["dt_proj"].shape[0]
+
+    xz = x @ p["in_proj"]
+    xh, z = jnp.split(xz, 2, axis=-1)
+    xh, conv_state = _causal_conv(xh, p["conv_w"], p["conv_b"], state["conv"])
+    xh = jax.nn.silu(xh)
+
+    dbc = xh @ p["x_proj"]
+    dt = jax.nn.softplus(dbc[..., :dtr].astype(jnp.float32)
+                         @ p["dt_proj"].astype(jnp.float32) + p["dt_bias"])
+    b_ssm = dbc[..., dtr:dtr + n].astype(jnp.float32)
+    c_ssm = dbc[..., dtr + n:].astype(jnp.float32)
+    a = -jnp.exp(p["a_log"])                                   # (Di,N)
+
+    xf = xh.astype(jnp.float32)
+    if s == 1:
+        h = state["ssm"]
+        decay = jnp.exp(dt[:, 0][..., None] * a)               # (B,Di,N)
+        inc = (dt[:, 0] * xf[:, 0])[..., None] * b_ssm[:, 0][:, None, :]
+        h = decay * h + inc
+        y = jnp.einsum("bdn,bn->bd", h, c_ssm[:, 0])[:, None]
+        ssm_state = h
+    else:
+        chunk = min(cfg.ssm.chunk_size, s)
+        assert s % chunk == 0
+        nc = s // chunk
+
+        def step(h0, xs):
+            dt_j, b_j, c_j, x_j = xs                           # (B,C,*)
+            decay = jnp.exp(dt_j[..., None] * a)                # (B,C,Di,N)
+            inc = (dt_j * x_j)[..., None] * b_j[:, :, None, :]
+
+            # associative scan in linear space: exact (products underflow to
+            # the true limit instead of breaking decay ratios as a clipped
+            # log-space cumsum would — see DESIGN.md numerics note)
+            def comb(l, r):
+                dl, il = l
+                dr, ir = r
+                return dl * dr, dr * il + ir
+
+            pd, pi = jax.lax.associative_scan(comb, (decay, inc), axis=1)
+            hs = pd * h0[:, None] + pi
+            y_j = jnp.einsum("bcdn,bcn->bcd", hs, c_j)
+            return hs[:, -1], y_j
+
+        xs = tuple(v.reshape(b, nc, chunk, -1).swapaxes(0, 1)
+                   for v in (dt, b_ssm, c_ssm, xf))
+        # remat: backward recomputes the (B,C,Di,N) chunk states from the
+        # carried (B,Di,N) chunk boundary instead of saving them all
+        ssm_state, y = jax.lax.scan(jax.checkpoint(step), state["ssm"], xs)
+        y = y.swapaxes(0, 1).reshape(b, s, di)
+
+    y = y + p["d_skip"] * xf
+    out = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+    return out, {"conv": conv_state, "ssm": ssm_state}
+
+
+def mamba_state_init(cfg, batch, dtype=jnp.float32):
+    di = cfg.d_model * cfg.ssm.expand
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm.d_conv - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, cfg.ssm.d_state), jnp.float32),
+    }

@@ -1,0 +1,334 @@
+"""Stage-based transformer stack covering all assigned families.
+
+Layers are grouped into repeating *stages* of length
+lcm(attn_period, moe_period) (1 for homogeneous stacks, 8 for Jamba) and the
+stack `lax.scan`s over stages with stacked parameters, so HLO size is
+independent of depth (61-layer Kimi-K2 compiles the same module as 2 layers).
+
+Modes:
+  train   — full-seq causal, returns logits (+ MoE aux loss)
+  prefill — full-seq causal, also returns populated KV caches / SSM states
+  decode  — single token against caches at position `cur_index`
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+
+
+# ---------------------------------------------------------------------------
+# structure
+
+
+def stage_len(cfg) -> int:
+    sl = cfg.attn_period
+    if cfg.moe is not None:
+        sl = math.lcm(sl, cfg.moe.period)
+    return sl
+
+
+def num_stages(cfg) -> int:
+    sl = stage_len(cfg)
+    assert cfg.num_layers % sl == 0 or sl == 1, (cfg.num_layers, sl)
+    return math.ceil(cfg.num_layers / sl)
+
+
+def mixer_kind(cfg, j: int) -> str:
+    if cfg.family == "ssm":
+        return cfg.ssm.variant
+    if cfg.is_attn_layer(j):
+        return "attn"
+    return cfg.ssm.variant  # hybrid non-attn layers
+
+
+def ffn_kind(cfg, j: int) -> str:
+    if cfg.family == "ssm" and cfg.ssm.variant == "rwkv6":
+        return "rwkv_cm"  # channel-mix lives inside the rwkv params
+    return "moe" if cfg.is_moe_layer(j) else "mlp"
+
+
+# ---------------------------------------------------------------------------
+# init
+
+
+def _init_block(key, cfg, j, dtype):
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"ln1": L.init_norm(cfg.d_model, cfg.norm, dtype)}
+    mk = mixer_kind(cfg, j)
+    if mk == "attn":
+        p["attn"] = L.init_attention(ks[0], cfg, dtype)
+        if cfg.cross_attention:
+            p["ln_x"] = L.init_norm(cfg.d_model, cfg.norm, dtype)
+            p["xattn"] = L.init_attention(ks[2], cfg, dtype)
+    elif mk == "rwkv6":
+        p["rwkv"] = SSM.init_rwkv6(ks[0], cfg, dtype)
+    elif mk == "mamba":
+        p["mamba"] = SSM.init_mamba(ks[0], cfg, dtype)
+    fk = ffn_kind(cfg, j)
+    if fk != "rwkv_cm":
+        p["ln2"] = L.init_norm(cfg.d_model, cfg.norm, dtype)
+        if fk == "moe":
+            p["moe"] = MOE.init_moe(ks[1], cfg, dtype)
+        else:
+            p["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.act, dtype)
+    else:
+        p["ln2"] = L.init_norm(cfg.d_model, cfg.norm, dtype)
+    return p
+
+
+def _init_stage(key, cfg, dtype):
+    sl = stage_len(cfg)
+    ks = jax.random.split(key, sl)
+    return {f"pos{j}": _init_block(ks[j], cfg, j, dtype) for j in range(sl)}
+
+
+def _init_enc_layer(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": L.init_norm(cfg.d_model, cfg.norm, dtype),
+        "attn": L.init_attention(ks[0], cfg, dtype),
+        "ln2": L.init_norm(cfg.d_model, cfg.norm, dtype),
+        "mlp": L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.act, dtype),
+    }
+
+
+def init_params(cfg, key, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    ns = num_stages(cfg)
+    params = {
+        "embed": L.init_embed(ks[0], cfg.padded_vocab, cfg.d_model, dtype),
+        "stages": jax.vmap(lambda k: _init_stage(k, cfg, dtype))(
+            jax.random.split(ks[1], ns)),
+        "final_norm": L.init_norm(cfg.d_model, cfg.norm, dtype),
+        "lm_head": L._dense_init(ks[2], cfg.d_model, cfg.padded_vocab, dtype),
+    }
+    if cfg.encoder_layers:
+        params["encoder"] = jax.vmap(lambda k: _init_enc_layer(k, cfg, dtype))(
+            jax.random.split(ks[3], cfg.encoder_layers))
+        params["enc_norm"] = L.init_norm(cfg.d_model, cfg.norm, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# caches
+
+
+def init_cache(cfg, batch, max_len, dtype=jnp.bfloat16):
+    """Decode-state pytree, stacked over stages per stage-position."""
+    ns = num_stages(cfg)
+    sl = stage_len(cfg)
+
+    def stk(x):
+        return jnp.broadcast_to(x[None], (ns,) + x.shape)
+
+    cache: Dict[str, Any] = {}
+    for j in range(sl):
+        mk = mixer_kind(cfg, j)
+        c: Dict[str, Any] = {}
+        if mk == "attn":
+            kv = {
+                "k": jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+                "v": jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+            }
+            c["kv"] = jax.tree.map(stk, kv)
+            if cfg.cross_attention:
+                xkv = {
+                    "k": jnp.zeros((batch, cfg.num_frames, cfg.num_kv_heads,
+                                    cfg.head_dim), dtype),
+                    "v": jnp.zeros((batch, cfg.num_frames, cfg.num_kv_heads,
+                                    cfg.head_dim), dtype),
+                }
+                c["xkv"] = jax.tree.map(stk, xkv)
+        elif mk == "rwkv6":
+            c["rwkv"] = jax.tree.map(stk, SSM.rwkv6_state_init(cfg, batch))
+        elif mk == "mamba":
+            c["mamba"] = jax.tree.map(stk, SSM.mamba_state_init(cfg, batch))
+        cache[f"pos{j}"] = c
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# blocks
+
+
+def _apply_block(bp, x, cfg, j, *, mode, positions, cache, cur_index, parallel,
+                 enc_out=None):
+    """One layer. Returns (x, new_cache_j, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    mk = mixer_kind(cfg, j)
+    new_cache = dict(cache) if cache is not None else None
+
+    h = L.apply_norm(bp["ln1"], x, cfg.norm)
+    if mk == "attn":
+        kv_cache = cache.get("kv") if (cache is not None and mode == "decode") else None
+        out, extra = L.attention_apply(
+            bp["attn"], h, cfg, positions=positions,
+            cache=kv_cache, cache_index=cur_index)
+        if mode == "decode":
+            new_cache["kv"] = extra
+        elif mode == "prefill" and cache is not None and "kv" in cache:
+            new_cache["kv"] = {
+                "k": jax.lax.dynamic_update_slice(
+                    cache["kv"]["k"],
+                    extra["k"].astype(cache["kv"]["k"].dtype), (0, 0, 0, 0)),
+                "v": jax.lax.dynamic_update_slice(
+                    cache["kv"]["v"],
+                    extra["v"].astype(cache["kv"]["v"].dtype), (0, 0, 0, 0)),
+            }
+        x = x + out
+        if cfg.cross_attention:
+            h2 = L.apply_norm(bp["ln_x"], x, cfg.norm)
+            if mode == "decode":
+                xkv = (cache["xkv"]["k"], cache["xkv"]["v"])
+                out2, _ = L.attention_apply(
+                    bp["xattn"], h2, cfg, positions=positions,
+                    cache=cache["xkv"], kv_override=xkv, cache_index=cur_index)
+            else:
+                k = L._split_heads(enc_out @ bp["xattn"]["wk"],
+                                   cfg.num_kv_heads, cfg.head_dim)
+                v = L._split_heads(enc_out @ bp["xattn"]["wv"],
+                                   cfg.num_kv_heads, cfg.head_dim)
+                out2, _ = L.attention_apply(
+                    bp["xattn"], h2, cfg, positions=positions,
+                    kv_override=(k, v), causal=False)
+                if cache is not None:  # prefill fills the cross cache
+                    new_cache["xkv"] = {"k": k.astype(cache["xkv"]["k"].dtype),
+                                        "v": v.astype(cache["xkv"]["v"].dtype)}
+            x = x + out2
+    elif mk == "rwkv6":
+        st = {"shift": cache["rwkv"]["shift_tm"], "wkv": cache["rwkv"]["wkv"]}
+        out, nst = SSM.rwkv6_time_mix(bp["rwkv"], h, cfg, st)
+        new_cache["rwkv"] = dict(cache["rwkv"])
+        new_cache["rwkv"]["shift_tm"] = nst["shift"].astype(
+            cache["rwkv"]["shift_tm"].dtype)
+        new_cache["rwkv"]["wkv"] = nst["wkv"]
+        x = x + out
+    elif mk == "mamba":
+        out, nst = SSM.mamba_mix(bp["mamba"], h, cfg, cache["mamba"])
+        new_cache["mamba"] = {
+            "conv": nst["conv"].astype(cache["mamba"]["conv"].dtype),
+            "ssm": nst["ssm"]}
+        x = x + out
+
+    fk = ffn_kind(cfg, j)
+    h = L.apply_norm(bp["ln2"], x, cfg.norm)
+    if fk == "moe":
+        out, aux = MOE.apply_moe(bp["moe"], h, cfg, parallel)
+    elif fk == "rwkv_cm":
+        out, nshift = SSM.rwkv6_channel_mix(bp["rwkv"], h,
+                                            cache["rwkv"]["shift_cm"])
+        new_cache["rwkv"]["shift_cm"] = nshift.astype(
+            cache["rwkv"]["shift_cm"].dtype)
+    else:
+        out = L.apply_mlp(bp["mlp"], h, cfg.act)
+    x = x + out
+    return x, new_cache, aux
+
+
+def _needs_cache(cfg, mode):
+    # SSM/hybrid layers always carry state (even in "train" we thread zeros,
+    # cheap and uniform); attention only caches for prefill/decode.
+    return True
+
+
+def _stage_fn(cfg, mode, parallel, positions, cur_index, enc_out):
+    sl = stage_len(cfg)
+
+    def f(carry, xs):
+        x, aux = carry
+        sp, sc = xs
+        new_sc = {}
+        for j in range(sl):
+            cj = sc[f"pos{j}"] if sc is not None else None
+            x, ncj, a = _apply_block(
+                sp[f"pos{j}"], x, cfg, j, mode=mode, positions=positions,
+                cache=cj, cur_index=cur_index, parallel=parallel,
+                enc_out=enc_out)
+            if parallel is not None:
+                x = parallel.constrain_tokens_major(x, x.shape[0])
+            new_sc[f"pos{j}"] = ncj if ncj is not None else cj
+            aux = aux + a
+        return (x, aux), new_sc
+
+    return f
+
+
+def _encoder(params, cfg, frames):
+    """frames: (B, F, D) stub embeddings."""
+    pos = L.sinusoidal_positions(frames.shape[1], cfg.d_model)
+    x = frames + pos[None].astype(frames.dtype)
+
+    def f(x, lp):
+        h = L.apply_norm(lp["ln1"], x, cfg.norm)
+        out, _ = L.attention_apply(lp["attn"], h, cfg,
+                                   positions=jnp.arange(frames.shape[1])[None],
+                                   causal=False)
+        x = x + out
+        h = L.apply_norm(lp["ln2"], x, cfg.norm)
+        return x + L.apply_mlp(lp["mlp"], h, cfg.act), None
+
+    x, _ = jax.lax.scan(f, x, params["encoder"])
+    return L.apply_norm(params["enc_norm"], x, cfg.norm)
+
+
+def forward(params, cfg, tokens, *, mode="train", cache=None, cur_index=None,
+            frames=None, mrope_positions=None, parallel=None,
+            remat_policy="none"):
+    """tokens (B,S) int32. Returns dict(logits, cache, aux_loss)."""
+    b, s = tokens.shape
+    x = params["embed"]["table"][tokens]
+
+    if cfg.rope_variant == "mrope":
+        positions = (mrope_positions if mrope_positions is not None
+                     else jnp.broadcast_to(jnp.arange(s)[None, None], (3, b, s)))
+        if mode == "decode":
+            positions = positions + cur_index
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        if mode == "decode":
+            positions = positions + cur_index
+    if cfg.rope_variant == "none" and cfg.family in ("audio",):
+        if mode == "decode":
+            max_len = cache["pos0"]["kv"]["k"].shape[2]
+            table = L.sinusoidal_positions(max_len, cfg.d_model)
+            pos = jax.lax.dynamic_slice_in_dim(table, cur_index, 1, axis=0)
+        else:
+            pos = L.sinusoidal_positions(max(s, 1), cfg.d_model)[:s]
+        x = x + pos[None].astype(x.dtype)
+
+    enc_out = None
+    if cfg.encoder_layers and mode != "decode":
+        assert frames is not None, "whisper needs stub frame embeddings"
+        enc_out = _encoder(params, cfg, frames)
+
+    if cache is None:
+        cache = init_cache(cfg, b, 1 if mode == "train" else s)
+        if mode == "train":
+            # attention layers don't need a real cache in train mode
+            pass
+
+    if parallel is not None:
+        x = parallel.constrain_tokens_major(x, b)
+
+    fn = _stage_fn(cfg, mode, parallel, positions, cur_index, enc_out)
+    if remat_policy != "none":
+        # "full": save only layer inputs, recompute everything in backward
+        # (the +33% recompute shows up honestly in the roofline compute term)
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if remat_policy == "dots" else None)
+        fn = jax.checkpoint(fn, policy=policy)
+    (x, aux), new_cache = jax.lax.scan(fn, (x, jnp.zeros((), jnp.float32)),
+                                       (params["stages"], cache))
+
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = x @ params["lm_head"]
+    return {"logits": logits, "cache": new_cache, "aux_loss": aux}

@@ -1,0 +1,127 @@
+"""ParallelContext: the single source of truth for mesh-axis decisions.
+
+Both the GSPMD param/input shardings (parallel/sharding.py) and the explicit
+shard_map collectives (models/moe.py) consult this object, so the two can
+never disagree about where a tensor lives.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# params above this count get their expert d_model FSDP-sharded over `pod`
+_POD_FSDP_THRESHOLD = 3e11
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelContext:
+    """profile:
+      "2d"   — FSDP x TP (batch over (pod,data), weights (data, model)) —
+               the right scheme for TP-worthy models and for decode latency.
+      "fsdp" — pure ZeRO-3: batch AND params sharded over every mesh axis,
+               no tensor parallelism — the right scheme for <8B dense models
+               on a 256-chip pod, where TP=16 activation all-reduces dwarf
+               FSDP param gathers (§Perf iteration 1).
+    gather_quant: fp8 weight gathers for the MoE FSDP path (§Perf, kimi).
+    """
+    mesh: Mesh
+    profile: str = "2d"          # "2d" | "fsdp" | "tp"
+    gather_quant: bool = False
+    seq_shard: bool = True       # sequence parallelism (off for MoE archs —
+                                 # their EP design token-replicates over model)
+
+    @property
+    def multi_pod(self) -> bool:
+        return "pod" in self.mesh.shape
+
+    def has_axis(self, name: str) -> bool:
+        return name in self.mesh.shape and self.mesh.shape[name] > 1
+
+    def axis_size(self, name: str) -> int:
+        return self.mesh.shape.get(name, 1)
+
+    def axes_size(self, names: Sequence[str]) -> int:
+        n = 1
+        for a in names:
+            n *= self.axis_size(a)
+        return n
+
+    def batch_axes(self, batch: int) -> Tuple[str, ...]:
+        """Largest divisible prefix of the profile's data axes."""
+        cands = ([("pod", "data", "model"), ("data", "model"),
+                  ("pod", "data"), ("data",)]
+                 if self.profile == "fsdp" else
+                 [("pod", "data"), ("data",)])
+        for axes in cands:
+            if not all(a in self.mesh.shape for a in axes):
+                continue
+            if batch % self.axes_size(axes) == 0 and self.axes_size(axes) > 1:
+                return axes
+        return ()
+
+    def fsdp_weight_axes(self, dim: int):
+        """Best divisible axis combo for ZeRO-3 weight sharding."""
+        for axes in (("pod", "data", "model"), ("data", "model"),
+                     ("data",), ("model",)):
+            if all(a in self.mesh.shape for a in axes) and dim % self.axes_size(axes) == 0:
+                return axes
+        return None
+
+    def dp_spec(self, batch: int):
+        ax = self.batch_axes(batch)
+        return ax if ax else None
+
+    def divides(self, dim: int, axes) -> bool:
+        if axes is None:
+            return True
+        if isinstance(axes, str):
+            axes = (axes,)
+        return dim % self.axes_size(axes) == 0
+
+    def moe_weight_axes(self, cfg) -> dict:
+        """How expert weights (E, d_model, d_ff) are sharded beyond EP."""
+        d_ff_ax = None
+        if (self.profile != "tp" and self.has_axis("data")
+                and cfg.moe.d_ff_expert % self.axis_size("data") == 0):
+            d_ff_ax = "data"
+        d_model_ax = None
+        if (self.multi_pod and cfg.param_count() > _POD_FSDP_THRESHOLD
+                and cfg.d_model % self.axis_size("pod") == 0):
+            d_model_ax = "pod"
+        return {"d_ff": d_ff_ax, "d_model": d_model_ax}
+
+    def sharding(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    def constrain(self, x, *spec):
+        """with_sharding_constraint helper (no-op on a trivial mesh)."""
+        if self.mesh.size == 1:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec)))
+
+    def constrain_tokens_major(self, x, batch: int):
+        """Activation layout between blocks: batch -> (pod, data); under the
+        2d profile the SEQUENCE dim is additionally sharded over `model`
+        (Megatron-style sequence parallelism — §Perf iteration: turns the
+        per-layer (B,S,D) all-reduce into gathers of the much smaller GQA
+        K/V tensors inside attention)."""
+        dp = self.batch_axes(batch)
+        seq_ax = None
+        if (self.profile in ("2d", "fsdp") and self.seq_shard and x.ndim == 3
+                and self.has_axis("model")
+                and "model" not in (dp or ())
+                and x.shape[1] % self.axis_size("model") == 0
+                and x.shape[1] > 1):
+            # 2d: Megatron sequence parallelism. fsdp-prefill: the batch may
+            # not cover (data x model) — without seq-sharding the model axis
+            # idles and GSPMD REPLICATES compute 4-5x (measured, §Perf)
+            seq_ax = "model"
+        if x.ndim == 3:
+            return self.constrain(x, dp if dp else None, seq_ax, None)
+        return self.constrain(x, dp if dp else None,
+                              *([None] * (x.ndim - 1)))

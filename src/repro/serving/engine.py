@@ -1,0 +1,73 @@
+"""Serving loop: jit'd prefill + decode steps with a fixed-slot batch (the
+production shapes prefill_32k/decode_32k/long_500k lower exactly these step
+functions — see launch/dryrun.py)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, init_cache, prefill_step
+
+
+class LMServer:
+    def __init__(self, params, cfg, max_len: int = 512, parallel=None):
+        self.params, self.cfg, self.max_len = params, cfg, max_len
+        self.parallel = parallel
+        self._prefill = jax.jit(
+            lambda p, b: prefill_step(p, cfg, b, parallel=parallel))
+        self._decode = jax.jit(
+            lambda p, t, c, i, mp: decode_step(
+                p, cfg, t, c, i, parallel=parallel, mrope_positions=mp))
+
+    def generate(self, prompts: np.ndarray, new_tokens: int = 32,
+                 temperature: float = 0.0, seed: int = 0,
+                 frames: Optional[np.ndarray] = None) -> np.ndarray:
+        """prompts (B, S) int32 -> (B, new_tokens) int32 greedy/sampled."""
+        b, s = prompts.shape
+        assert s + new_tokens <= self.max_len
+        batch = {"tokens": jnp.asarray(prompts)}
+        if self.cfg.frontend == "audio_stub":
+            batch["frames"] = (jnp.asarray(frames) if frames is not None else
+                               jnp.zeros((b, self.cfg.num_frames,
+                                          self.cfg.d_model), jnp.float32))
+        if self.cfg.rope_variant == "mrope":
+            batch["mrope_positions"] = jnp.broadcast_to(
+                jnp.arange(s)[None, None], (3, b, s))
+        # prefill fills a max_len cache: pad prompt into a max_len buffer
+        cache = init_cache(self.cfg, b, self.max_len)
+        logits, pf_cache = self._prefill(self.params, batch)
+        # copy prefilled kv into the serving cache (same tree structure,
+        # prefill cache has seq dim s)
+        cache = jax.tree.map(self._fit, cache, pf_cache)
+
+        key = jax.random.PRNGKey(seed)
+        out = np.empty((b, new_tokens), np.int32)
+        tok = self._pick(logits, temperature, key)
+        mp0 = (jnp.zeros((3, b, 1), jnp.int32)
+               if self.cfg.rope_variant == "mrope" else None)
+        for i in range(new_tokens):
+            out[:, i] = np.asarray(tok)
+            logits, cache = self._decode(self.params, tok[:, None], cache,
+                                         jnp.int32(s + i), mp0)
+            key, sub = jax.random.split(key)
+            tok = self._pick(logits, temperature, sub)
+        return out
+
+    @staticmethod
+    def _fit(dst, src):
+        if dst.shape == src.shape:
+            return src
+        # kv caches: (ns, B, S, KV, hd) — write src's S into dst's prefix
+        sl = tuple(slice(0, m) for m in src.shape)
+        return dst.at[sl].set(src.astype(dst.dtype))
+
+    @staticmethod
+    def _pick(logits, temperature, key):
+        if temperature <= 0:
+            return jnp.argmax(logits, -1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / temperature, axis=-1).astype(jnp.int32)

@@ -1,0 +1,36 @@
+"""Gradient accumulation (microbatching): the standard lever when the global
+batch exceeds per-step memory — `lax.scan` over microbatches accumulating
+grads in f32, one optimizer step at the end. Composes with any loss_fn and
+with the EF compressor (compression applies to the accumulated gradient,
+i.e. once per step, not per microbatch)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def accumulated_grads(loss_fn, params, batch, n_micro: int, *loss_args,
+                      **loss_kw):
+    """batch: pytree with leading global-batch dims divisible by n_micro.
+    Returns ((loss, aux_of_last_micro), grads) — grads averaged in f32."""
+    def split(x):
+        b = x.shape[0]
+        assert b % n_micro == 0, (b, n_micro)
+        return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+    micro = jax.tree.map(split, batch)
+    gfn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(carry, mb):
+        acc, loss_acc = carry
+        (loss, aux), g = gfn(params, mb, *loss_args, **loss_kw)
+        acc = jax.tree.map(
+            lambda a, gi: a + gi.astype(jnp.float32) / n_micro, acc, g)
+        return (acc, loss_acc + loss / n_micro), aux
+
+    acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (grads, loss), aux = jax.lax.scan(step, (acc0, jnp.zeros((), jnp.float32)),
+                                      micro)
+    aux_last = jax.tree.map(lambda x: x[-1], aux)
+    grads = jax.tree.map(lambda g, p: g.astype(p.dtype), grads, params)
+    return (loss, aux_last), grads

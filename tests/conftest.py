@@ -1,0 +1,33 @@
+import os
+import sys
+
+# Smoke tests and benches must see ONE device — the 512-device override is
+# exclusively the dry-run's (set inside repro/launch/dryrun.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(scope="session")
+def small_dataset():
+    from repro.core import make_dataset
+    return make_dataset("deep-like", n=2048, nq=64, seed=1)
+
+
+@pytest.fixture(scope="session")
+def small_graph(small_dataset):
+    from repro.core.vamana import build_vamana
+    G, med, stats = build_vamana(small_dataset.vectors, R=16, L=32,
+                                 batch=512, seed=1)
+    return G, med, stats
+
+
+@pytest.fixture(scope="session")
+def base_index(small_dataset, small_graph):
+    from repro.core import build_index, get_preset
+    G, med, _ = small_graph
+    return build_index(small_dataset, get_preset("baseline"),
+                       graph=G, medoid_id=med)

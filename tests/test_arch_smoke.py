@@ -1,0 +1,118 @@
+"""Per-architecture smoke tests (reduced same-family configs): one forward +
+one train step on CPU asserting shapes and finiteness, plus the strongest
+cache-correctness check we have: single-token decode must reproduce
+teacher-forced prefill logits for EVERY family (attention KV caches, RWKV6
+state, Mamba conv+ssm state, whisper cross-attention)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import (decode_step, init_params, loss_fn, prefill_step)
+
+B, S = 2, 32
+
+
+def _batch(cfg):
+    rng = np.random.default_rng(0)
+    b = {"tokens": jnp.asarray(rng.integers(1, cfg.vocab_size, (B, S)),
+                               jnp.int32)}
+    if cfg.frontend == "audio_stub":
+        b["frames"] = jnp.asarray(
+            rng.normal(0, 0.1, (B, cfg.num_frames, cfg.d_model)), jnp.float32)
+    if cfg.rope_variant == "mrope":
+        b["mrope_positions"] = jnp.broadcast_to(
+            jnp.arange(S)[None, None], (3, B, S)).astype(jnp.int32)
+    return b
+
+
+@pytest.fixture(scope="module")
+def arch_state():
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = get_smoke_config(arch)
+            params = init_params(cfg, jax.random.PRNGKey(0),
+                                 dtype=jnp.float32)
+            cache[arch] = (cfg, params)
+        return cache[arch]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_shapes_and_finite(arch, arch_state):
+    cfg, params = arch_state(arch)
+    batch = _batch(cfg)
+    loss, metrics = loss_fn(params, cfg, batch)
+    assert np.isfinite(float(loss)), arch
+    g = jax.grad(lambda p: loss_fn(p, cfg, batch)[0])(params)
+    gn = sum(float(jnp.sum(jnp.square(x))) for x in jax.tree.leaves(g))
+    assert np.isfinite(gn) and gn > 0, arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_prefill(arch, arch_state):
+    """logits(prefill(t_0..t_s)) == logits(decode after prefill(t_0..t_{s-1}))."""
+    cfg, params = arch_state(arch)
+    batch = _batch(cfg)
+    toks = batch["tokens"]
+
+    full = dict(batch)
+    logits_full, _ = prefill_step(params, cfg, full)
+
+    s_half = S // 2
+    part = dict(batch)
+    part["tokens"] = toks[:, :s_half]
+    if "mrope_positions" in part:
+        part["mrope_positions"] = part["mrope_positions"][:, :, :s_half]
+    logits_h, cache = prefill_step(params, cfg, part)
+    # grow cache to length S by padding decode slots
+    from repro.models import init_cache
+    big = init_cache(cfg, B, S)
+    cache = jax.tree.map(
+        lambda d, c: (c if d.shape == c.shape
+                      else d.at[tuple(slice(0, m) for m in c.shape)].set(
+                          c.astype(d.dtype))), big, cache)
+    lg = logits_h
+    # decode convention: mrope positions are RELATIVE (forward adds cur_index)
+    mp = (jnp.zeros((3, B, 1), jnp.int32)
+          if cfg.rope_variant == "mrope" else None)
+    for i in range(s_half, S):
+        lg, cache = decode_step(params, cfg, toks[:, i:i + 1], cache,
+                                jnp.int32(i), mrope_positions=mp)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(logits_full),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_exact_spec(arch):
+    """The full config files carry the exact assigned hyperparameters."""
+    cfg = get_config(arch)
+    spec = {
+        "tinyllama-1.1b": (22, 2048, 32, 4, 5632, 32000),
+        "stablelm-3b": (32, 2560, 32, 32, 6912, 50304),
+        "chatglm3-6b": (28, 4096, 32, 2, 13696, 65024),
+        "stablelm-12b": (40, 5120, 32, 8, 13824, 100352),
+        "rwkv6-3b": (32, 2560, 40, 40, 8960, 65536),
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+        "qwen2-moe-a2.7b": (24, 2048, 16, 16, 1408, 151936),
+        "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+        "whisper-small": (12, 768, 12, 12, 3072, 51865),
+        "qwen2-vl-2b": (28, 1536, 12, 2, 8960, 151936),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == spec, (arch, got, spec)
+    if arch == "kimi-k2-1t-a32b":
+        assert cfg.moe.num_experts == 384 and cfg.moe.top_k == 8
+        assert cfg.param_count() > 1e12
+    if arch == "qwen2-moe-a2.7b":
+        assert cfg.moe.num_experts == 60 and cfg.moe.top_k == 4
+        assert cfg.moe.num_shared_experts == 4
+    if arch == "jamba-v0.1-52b":
+        assert cfg.moe.num_experts == 16 and cfg.moe.top_k == 2
+        attn_layers = [i for i in range(32) if cfg.is_attn_layer(i)]
+        assert len(attn_layers) == 4  # 1:7 interleave

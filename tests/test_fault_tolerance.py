@@ -1,0 +1,122 @@
+"""Checkpoint/restart, data determinism, straggler monitor, optimizer."""
+import json
+import subprocess
+import sys
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.training import checkpoint as ck
+    tree = {"a": jnp.arange(10, dtype=jnp.float32),
+            "b": {"c": jnp.ones((3, 4), jnp.bfloat16)}}
+    ck.save(tmp_path, 5, tree)
+    ck.save(tmp_path, 10, jax.tree.map(lambda x: x * 2, tree))
+    assert ck.latest_step(tmp_path) == 10
+    restored, step = ck.restore(tmp_path, tree)
+    assert step == 10
+    np.testing.assert_allclose(np.asarray(restored["a"]),
+                               np.arange(10) * 2)
+    assert restored["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_prune_keeps_k(tmp_path):
+    from repro.training import checkpoint as ck
+    tree = {"a": jnp.zeros(4)}
+    for s in (1, 2, 3, 4, 5):
+        ck.save(tmp_path, s, tree, keep=2)
+    assert ck.latest_step(tmp_path) == 5
+    restored, step = ck.restore(tmp_path, tree, step=4)
+    assert step == 4
+    with pytest.raises(FileNotFoundError):
+        ck.restore(tmp_path, tree, step=1)
+
+
+def test_data_pipeline_deterministic_and_host_disjoint():
+    from repro.data.pipeline import DataConfig, TokenPipeline
+    a = TokenPipeline(DataConfig(vocab_size=100, seq_len=16, global_batch=8))
+    b = TokenPipeline(DataConfig(vocab_size=100, seq_len=16, global_batch=8))
+    np.testing.assert_array_equal(a.batch(7)["tokens"], b.batch(7)["tokens"])
+    h0 = TokenPipeline(DataConfig(vocab_size=100, seq_len=16, global_batch=8,
+                                  num_hosts=2, host_index=0))
+    h1 = TokenPipeline(DataConfig(vocab_size=100, seq_len=16, global_batch=8,
+                                  num_hosts=2, host_index=1))
+    assert not np.array_equal(h0.batch(0)["tokens"], h1.batch(0)["tokens"])
+    assert h0.batch(0)["tokens"].shape == (4, 16)
+
+
+def test_train_die_and_resume_reproduces_trajectory(tmp_path):
+    """End-to-end restart drill: a run killed at step 15 and resumed must
+    land on the same final loss as an uninterrupted run."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    base = [sys.executable, "-m", "repro.launch.train", "--arch",
+            "tinyllama-1.1b", "--smoke", "--steps", "24", "--batch", "2",
+            "--seq", "32", "--ckpt-every", "8", "--log-every", "100"]
+    m_all = tmp_path / "all.json"
+    subprocess.run(base + ["--metrics-out", str(m_all)], env=env, check=True,
+                   capture_output=True)
+    ck = tmp_path / "ck"
+    r = subprocess.run(base + ["--ckpt-dir", str(ck), "--die-at", "15"],
+                       env=env, capture_output=True)
+    assert r.returncode == 42  # simulated failure
+    m_res = tmp_path / "res.json"
+    subprocess.run(base + ["--ckpt-dir", str(ck), "--resume",
+                           "--metrics-out", str(m_res)], env=env, check=True,
+                   capture_output=True)
+    full = json.load(open(m_all))["losses"]
+    res = json.load(open(m_res))
+    assert res["start"] == 8
+    np.testing.assert_allclose(res["losses"][-1], full[-1], rtol=1e-4)
+
+
+def test_adamw_converges_quadratic():
+    from repro.training import optim
+    opt = optim.OptimizerConfig(lr=0.1, weight_decay=0.0, warmup_steps=1,
+                                total_steps=200)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = optim.init_state(params, opt)
+    for _ in range(150):
+        g = {"w": 2 * params["w"]}
+        params, state, _ = optim.apply_updates(params, g, state, opt)
+    assert float(jnp.abs(params["w"]).max()) < 0.3
+
+
+def test_factored_second_moment_tracks_full():
+    from repro.training import optim
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(32, 48)), jnp.float32)
+    pf = {"w": jnp.zeros((32, 48))}
+    opt_full = optim.OptimizerConfig(lr=0.01, weight_decay=0.0,
+                                     factored=False, total_steps=100)
+    opt_fac = optim.OptimizerConfig(lr=0.01, weight_decay=0.0, factored=True,
+                                    min_factored_size=1, total_steps=100)
+    sf = optim.init_state(pf, opt_full)
+    sa = optim.init_state(pf, opt_fac)
+    assert "vr" in sa["mu"]["w"] and "v" in sf["mu"]["w"]
+    p1, p2 = pf, pf
+    for _ in range(20):
+        p1, sf, _ = optim.apply_updates(p1, {"w": g}, sf, opt_full)
+        p2, sa, _ = optim.apply_updates(p2, {"w": g}, sa, opt_fac)
+    # the rank-1 second moment is an approximation (that's the point —
+    # O(n+m) state); against a random dense gradient adafactor-style
+    # reconstruction correlates ~0.8 with full AdamW and must agree in sign
+    u1 = np.asarray(p1["w"]).ravel()
+    u2 = np.asarray(p2["w"]).ravel()
+    corr = np.corrcoef(u1, u2)[0, 1]
+    assert corr > 0.75, corr
+    assert (np.sign(u1) == np.sign(u2)).mean() > 0.95
+
+
+def test_straggler_monitor_flags():
+    from repro.launch.train import StragglerMonitor
+    mon = StragglerMonitor(factor=3.0, warmup=3)
+    for _ in range(10):
+        mon.record(0.01)
+    mon.record(0.2)
+    assert mon.flagged == 1

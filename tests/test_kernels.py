@@ -1,0 +1,66 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.page_scan import page_scan
+from repro.kernels.pq_adc import pq_adc
+from repro.kernels.ref import page_scan_ref, pq_adc_ref
+
+
+@pytest.mark.parametrize("n_pages,n_p,d,w,q", [
+    (16, 8, 128, 4, 1),
+    (64, 8, 128, 8, 4),
+    (32, 16, 256, 6, 8),
+    (8, 8, 512, 3, 2),
+    (128, 8, 128, 16, 16),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_page_scan_sweep(n_pages, n_p, d, w, q, dtype):
+    rng = np.random.default_rng(n_pages + d)
+    pages = jnp.asarray(rng.normal(size=(n_pages, n_p, d)), dtype)
+    ids = jnp.asarray(rng.integers(0, n_pages, w).astype(np.int32))
+    qs = jnp.asarray(rng.normal(size=(q, d)), dtype)
+    out = page_scan(pages, ids, qs, interpret=True)
+    ref = page_scan_ref(pages, ids, qs)
+    tol = 1e-5 if dtype == jnp.float32 else 0.3
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=tol, atol=tol * d)
+
+
+def test_page_scan_duplicate_and_oob_ids():
+    rng = np.random.default_rng(0)
+    pages = jnp.asarray(rng.normal(size=(8, 8, 128)).astype(np.float32))
+    ids = jnp.asarray(np.array([3, 3, 0, 7], np.int32))
+    qs = jnp.asarray(rng.normal(size=(2, 128)).astype(np.float32))
+    out = page_scan(pages, ids, qs, interpret=True)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(out[1]),
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("n,m,block", [
+    (100, 8, 64), (512, 16, 128), (1000, 16, 512), (4096, 32, 512),
+    (7, 16, 8),
+])
+def test_pq_adc_sweep(n, m, block):
+    rng = np.random.default_rng(n + m)
+    codes = jnp.asarray(rng.integers(0, 256, (n, m)).astype(np.uint8))
+    lut = jnp.asarray((rng.normal(size=(m, 256)) ** 2).astype(np.float32))
+    out = pq_adc(codes, lut, block_n=block, interpret=True)
+    ref = pq_adc_ref(codes, lut)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5)
+
+
+def test_pq_adc_matches_engine_semantics():
+    """Kernel ADC == the engine's in-search pq_dist == PQ.adc."""
+    from repro.core.pq import train_pq
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(512, 64)).astype(np.float32)
+    pq = train_pq(x, m=8, sample=512, iters=4)
+    q = rng.normal(size=(64,)).astype(np.float32)
+    lut = pq.lut(q)
+    ids = np.arange(100)
+    want = pq.adc(q, ids)
+    got = np.asarray(pq_adc(jnp.asarray(pq.codes[ids]), jnp.asarray(lut),
+                            block_n=32, interpret=True))
+    np.testing.assert_allclose(got, want, rtol=1e-4)
