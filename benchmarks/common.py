@@ -17,7 +17,7 @@ from pathlib import Path
 import numpy as np
 
 from repro.core import (SSDModel, build_index, get_preset, make_dataset,
-                        recall_at_k, summarize)
+                        recall_at_k)
 
 ART = Path(__file__).resolve().parent / "artifacts" / "ann"
 BENCH_N = int(os.environ.get("REPRO_BENCH_N", 8192))
@@ -70,6 +70,25 @@ def run(name: str, preset: str, L: int, **over):
     return dict(row)
 
 
+def metrics_row(res, ds, cfg) -> dict:
+    """One code path from QueryStats to a benchmark row: every script that
+    reports search metrics goes through QueryStats.summary (the device-model
+    summary) instead of hand-plumbing its own dict of fields."""
+    s = res.summary(MODEL, d=ds.d, pq_m=cfg.pq_m,
+                    page_bytes=cfg.page_bytes, pipeline=cfg.pipeline)
+    return {
+        "recall@10": round(recall_at_k(res.ids, ds.gt, cfg.k), 4),
+        "qps": round(s["qps"], 1),
+        "mean_latency_us": round(s["mean_latency_us"], 1),
+        "pages_per_query": round(s["mean_pages_per_query"], 2),
+        "hops": round(s["mean_hops"], 2),
+        "io_fraction": round(s["io_fraction"], 3),
+        "u_io": round(s["u_io"], 4),
+        "iops": round(s["iops"], 0),
+        "bw_mbps": round(s["bw_mbps"], 1),
+    }
+
+
 def _run(name: str, preset: str, L: int, **over):
     ds = dataset(name)
     cfg = get_preset(preset, L=L, **over)
@@ -77,20 +96,9 @@ def _run(name: str, preset: str, L: int, **over):
     t0 = time.time()
     res = idx.search(ds.queries, cfg)
     wall = time.time() - t0
-    rec = recall_at_k(res.ids, ds.gt, cfg.k)
-    s = summarize(MODEL, res, d=ds.d, pq_m=cfg.pq_m,
-                  page_bytes=cfg.page_bytes, pipeline=cfg.pipeline)
     return {
         "dataset": name, "preset": preset, "L": L,
-        "recall@10": round(rec, 4),
-        "qps": round(s["qps"], 1),
-        "mean_latency_us": round(s["mean_latency_us"], 1),
-        "pages_per_query": round(s["mean_pages_per_query"], 2),
-        "hops": round(float(res.hops.mean()), 2),
-        "io_fraction": round(s["io_fraction"], 3),
-        "u_io": round(s["u_io"], 4),
-        "iops": round(s["iops"], 0),
-        "bw_mbps": round(s["bw_mbps"], 1),
+        **metrics_row(res, ds, cfg),
         "wall_s": round(wall, 2),
     }
 

@@ -1,0 +1,62 @@
+"""Concurrency sweep (paper §8 guidelines): QPS / latency for the Table-2
+systems under a closed-loop serving load at 1-64 workers.
+
+Reproduces the storage-centric-vs-hybrid crossover: hybrid (pipeline +
+dynamic-width, e.g. PipeANN) wins at low concurrency by overlapping I/O with
+compute, while storage-centric page-utility systems (Starling/OctopusANN)
+win once the device saturates and throughput is decided purely by pages per
+query. Also reports the cross-query page dedup the serving layer's
+BatchedPageStore achieves over per-query accounting.
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core import get_preset, recall_at_k
+from repro.serving import AnnServer, ServerConfig
+
+SYSTEMS = ("diskann", "starling", "pipeann", "octopusann")
+WORKERS = (1, 2, 4, 8, 16, 32, 64)
+
+
+def sweep(name: str, preset: str, workers=WORKERS, L: int = 32,
+          rounds: int = 2, max_batch: int = 16, **over):
+    ds = common.dataset(name)
+    cfg = get_preset(preset, L=L, **over)
+    idx = common.index(name, preset, **over)
+    server = AnnServer(idx, cfg, common.MODEL,
+                       ServerConfig(max_batch=max_batch))
+    rows = []
+    for w in workers:
+        rep = server.serve_closed_loop(ds.queries, workers=w, rounds=rounds)
+        rec = recall_at_k(rep.stats.ids, ds.gt[rep.query_indices], cfg.k)
+        rows.append({"dataset": name, "system": preset, "L": L,
+                     **rep.row(), "recall@10": round(rec, 4)})
+    return rows
+
+
+def main(datasets=("sift-like",), systems=SYSTEMS, workers=WORKERS,
+         L: int = 32, rounds: int = 2):
+    rows = []
+    for ds in datasets:
+        over = {"page_bytes": 16384} if ds == "gist-like" else {}
+        for sysname in systems:
+            rows.extend(sweep(ds, sysname, workers=workers, L=L,
+                              rounds=rounds, **over))
+    common.print_table(rows)
+
+    # crossover check: best system at the lowest vs highest worker count
+    for ds in datasets:
+        for w in (min(workers), max(workers)):
+            at = {r["system"]: r for r in rows
+                  if r["dataset"] == ds and r["workers"] == w}
+            if not at:
+                continue
+            best = max(at, key=lambda s: at[s]["qps"])
+            print(f"# {ds} @ {w} workers: best={best} "
+                  f"qps={at[best]['qps']} "
+                  f"(dedup_saved={at[best]['dedup_saved_frac']})")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

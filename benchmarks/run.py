@@ -19,7 +19,7 @@ def main() -> None:
     Ls = (12, 16, 24, 32, 48, 64, 96) if full else (16, 32, 64)
 
     from benchmarks import (breakdown, build_overhead, cache_policy,
-                            combinations,
+                            combinations, concurrency,
                             io_model, kernels, latency_breakdown,
                             memory_budget, page_size, roofline, single_factor,
                             sota)
@@ -34,6 +34,9 @@ def main() -> None:
          lambda: combinations.main(datasets, Ls=Ls)),
         ("fig19-21_sota", lambda: sota.main(
             datasets, targets=(0.90, 0.95) if full else (0.90,))),
+        ("sec8_concurrency_serving", lambda: concurrency.main(
+            datasets if full else datasets[:1],
+            workers=(1, 2, 4, 8, 16, 32, 64) if full else (1, 4, 16, 64))),
         ("fig22_breakdown", lambda: breakdown.main()),
         ("fig23_page_size", lambda: page_size.main()),
         ("fig15_memory_budget", lambda: memory_budget.main()),

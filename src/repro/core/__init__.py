@@ -5,3 +5,5 @@ from repro.core.device_model import SSDModel, summarize
 from repro.core.engine import DiskIndex, SearchConfig, SearchResult
 from repro.core.pages import overlap_ratio
 from repro.core.presets import PRESETS, get_preset
+from repro.core.search_kernel import search_batched
+from repro.core.stats import QueryStats

@@ -9,6 +9,14 @@ Sequential execution (baseline): per-step latency = t_issue + pages/step
 service + compute. Pipeline search overlaps the two: max(io, compute) per
 step (§4.3.2, Fig. 9) — while its speculative reads add pages (Finding 5).
 
+Concurrency (serving layer): `concurrent_latency_us(queue_depth, ...)`
+generalizes the fixed-48-worker model to an arbitrary number of in-flight
+queries. Per-page service time inflates linearly with queue depth
+(closed-loop queueing knee: latency flat until the device's internal
+parallelism is covered, then ∝ depth, so throughput saturates at the
+IOPS/bandwidth ceiling). At queue_depth == workers it reproduces
+`query_latency_us` exactly.
+
 The TPU variant of the same model (used by kernels/page_scan) books HBM
 bytes at 819 GB/s with DMA/compute overlap — see benchmarks/roofline.py.
 """
@@ -23,6 +31,9 @@ import numpy as np
 class SSDModel:
     workers: int = 48
     issue_us: float = 12.0          # submission + completion overhead per batch
+    # NVMe internal parallelism: queue depths below this complete at the
+    # same per-read latency (flat region before the queueing knee)
+    device_parallelism: int = 8
     # page-size dependent service rates (measured in the paper)
     iops_4k: float = 819e3
     bw_4k: float = 3.2e9
@@ -32,28 +43,58 @@ class SSDModel:
     ns_per_dim_full: float = 0.8    # SIMD L2 per dimension
     ns_per_sub_adc: float = 1.2     # ADC table lookup per subspace
 
+    def _rates(self, page_bytes: int) -> tuple:
+        """(IOPS, bandwidth) at this page size; 8K interpolates between the
+        paper's two measured points."""
+        if page_bytes <= 4096:
+            return self.iops_4k, self.bw_4k
+        if page_bytes <= 8192:
+            return ((self.iops_4k + self.iops_16k) / 2,
+                    (self.bw_4k + self.bw_16k) / 2)
+        return self.iops_16k, self.bw_16k
+
     def page_service_us(self, page_bytes: int) -> float:
         """Mean device service time per page at saturation, amortized
-        across workers (queue-theoretic throughput view)."""
-        if page_bytes <= 4096:
-            iops, bw = self.iops_4k, self.bw_4k
-        elif page_bytes <= 8192:
-            # interpolate 8K between the two measured points
-            iops = (self.iops_4k + self.iops_16k) / 2
-            bw = (self.bw_4k + self.bw_16k) / 2
-        else:
-            iops, bw = self.iops_16k, self.bw_16k
+        across workers (queue-theoretic throughput view) — exactly the
+        pre-refactor fixed-concurrency model, independent of the
+        device_parallelism floor below."""
+        iops, bw = self._rates(page_bytes)
+        return max(1.0 / iops, page_bytes / bw) * self.workers * 1e6
+
+    def concurrent_page_service_us(self, page_bytes: int,
+                                   queue_depth: float) -> float:
+        """Per-page service time with `queue_depth` in-flight queries: flat
+        below `device_parallelism` (the device absorbs that much concurrency
+        at the knee latency, device_parallelism x the raw per-read time),
+        then grows ∝ depth (each page waits behind depth-1 peers), so
+        throughput saturates at the IOPS/bandwidth ceiling."""
+        iops, bw = self._rates(page_bytes)
         per_read = max(1.0 / iops, page_bytes / bw)
-        return per_read * self.workers * 1e6  # per-worker effective service
+        return per_read * max(queue_depth, float(self.device_parallelism)) * 1e6
+
+    def _compute_us(self, full_evals, pq_evals, mem_evals, d, pq_m):
+        return (full_evals * d * self.ns_per_dim_full
+                + pq_evals * pq_m * self.ns_per_sub_adc
+                + mem_evals * d * self.ns_per_dim_full) / 1e3
 
     def query_latency_us(self, *, hops, pages, full_evals, pq_evals,
                          mem_evals, d, pq_m, page_bytes, pipeline=False):
-        """All args per-query numpy arrays (B,). Returns (B,) microseconds."""
-        t_page = self.page_service_us(page_bytes)
-        io = pages * t_page + hops * self.issue_us
-        comp = (full_evals * d * self.ns_per_dim_full
-                + pq_evals * pq_m * self.ns_per_sub_adc
-                + mem_evals * d * self.ns_per_dim_full) / 1e3
+        """All args per-query numpy arrays (B,). Returns (B,) microseconds.
+        Fixed-concurrency view: the device is saturated by `workers`."""
+        return self.concurrent_latency_us(
+            self.workers, hops=hops, pages=pages, full_evals=full_evals,
+            pq_evals=pq_evals, mem_evals=mem_evals, d=d, pq_m=pq_m,
+            page_bytes=page_bytes, pipeline=pipeline)
+
+    def concurrent_latency_us(self, queue_depth, *, hops, pages, full_evals,
+                              pq_evals, mem_evals, d, pq_m, page_bytes,
+                              pipeline=False, page_dedup: float = 1.0):
+        """Per-query latency with `queue_depth` queries in flight on the
+        device. `page_dedup` (<= 1) rebates the page volume when a batch
+        scheduler coalesced duplicate reads (BatchedPageStore)."""
+        t_page = self.concurrent_page_service_us(page_bytes, queue_depth)
+        io = pages * page_dedup * t_page + hops * self.issue_us
+        comp = self._compute_us(full_evals, pq_evals, mem_evals, d, pq_m)
         if pipeline:
             # per-step overlap approximated at query granularity
             return np.maximum(io, comp) + np.minimum(io, comp) * 0.1
@@ -64,13 +105,7 @@ class SSDModel:
         IOPS/bandwidth saturation."""
         mean_lat = float(np.mean(latency_us))
         qps_workers = self.workers / (mean_lat * 1e-6)
-        if page_bytes <= 4096:
-            iops, bw = self.iops_4k, self.bw_4k
-        elif page_bytes <= 8192:
-            iops = (self.iops_4k + self.iops_16k) / 2
-            bw = (self.bw_4k + self.bw_16k) / 2
-        else:
-            iops, bw = self.iops_16k, self.bw_16k
+        iops, bw = self._rates(page_bytes)
         mean_pages = float(np.mean(pages))
         qps_iops = iops / max(mean_pages, 1e-9)
         qps_bw = bw / max(mean_pages * page_bytes, 1e-9)
@@ -85,23 +120,7 @@ class SSDModel:
 
 
 def summarize(model: SSDModel, result, *, d, pq_m, page_bytes, pipeline=False):
-    lat = model.query_latency_us(
-        hops=result.hops.astype(np.float64),
-        pages=result.page_reads.astype(np.float64),
-        full_evals=result.full_evals.astype(np.float64),
-        pq_evals=result.pq_evals.astype(np.float64),
-        mem_evals=result.mem_evals.astype(np.float64),
-        d=d, pq_m=pq_m, page_bytes=page_bytes, pipeline=pipeline)
-    qps = model.qps(lat, pages=result.page_reads, page_bytes=page_bytes)
-    dev = model.device_counters(qps, pages=result.page_reads,
-                                page_bytes=page_bytes)
-    io_us = result.page_reads.astype(np.float64) * model.page_service_us(page_bytes)
-    return {
-        "mean_latency_us": float(np.mean(lat)),
-        "p99_latency_us": float(np.percentile(lat, 99)),
-        "qps": qps,
-        "mean_pages_per_query": float(np.mean(result.page_reads)),
-        "io_fraction": float(np.mean(io_us / np.maximum(lat, 1e-9))),
-        "u_io": float(result.io_utilization()),
-        **dev,
-    }
+    """Compatibility alias — the summary lives on QueryStats (one code path
+    for tests, benchmarks and the serving layer)."""
+    return result.summary(model, d=d, pq_m=pq_m, page_bytes=page_bytes,
+                          pipeline=pipeline)

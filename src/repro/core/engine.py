@@ -1,42 +1,35 @@
-"""The disk-resident beam-search engine — the paper's eight techniques as one
-composable configuration (§4), with exact page-level I/O accounting (§3.1).
+"""Engine facade over the layered search stack.
 
-Execution is REAL (every page read, hop, distance evaluation and recall value
-is measured from the actual search); only wall-clock latency/QPS come from the
-paper's measured device model (core/device_model.py) applied to these counts.
+The former 326-line monolith is now three layers:
 
-Technique mapping (SearchConfig):
-  PQ            — always on (the paper's §6 baseline): neighbors ranked by
-                  memory-resident ADC distances; exact distances only for
-                  records whose page was fetched.
-  Cache         — `cached` vertex mask: frontier reads of cached vertices are
-                  free (served from memory).
-  MemGraph      — entry points supplied by the navigation layer instead of
-                  the medoid.
-  PageShuffle   — a different PageLayout (perm); engine unchanged.
-  AiS           — smaller n_p / bigger records (layout), memory freed.
-  DynamicWidth  — beam width schedule: w starts at w_min, doubles each
-                  iteration the best candidate set stops improving (approach
-                  -> converge phase detection, PipeANN-style).
-  Pipeline      — speculative frontier: issues reads for `spec` extra
-                  candidates per step (extra I/O, overlapped latency —
-                  reproduces Finding 5); on TPU this is the double-buffered
-                  DMA in kernels/page_scan.py.
-  PageSearch    — every record of a fetched page is scored exactly and
-                  inserted into the pool (raises per-page utility).
+  I/O layer      repro/io/page_store.py   — PageStore protocol: array-backed
+                                            "SSD", vertex-cache decorator,
+                                            cross-query batch coalescing.
+  Kernel layer   core/search_kernel.py    — the pure jitted beam search over
+                                            store-provided arrays; emits
+                                            QueryStats (core/stats.py).
+  Serving layer  repro/serving/ann_server.py — closed-loop concurrent query
+                                            server (queue + dynamic batcher +
+                                            per-worker SSD queueing).
+
+This module keeps the public surface the rest of the repo was built on:
+`SearchConfig` (the paper's eight techniques as one composable
+configuration, §4) and `DiskIndex` with a `search()` facade that is
+bit-identical to the pre-refactor engine (see tests/test_golden_facade.py).
+Execution is REAL (every page read, hop, distance evaluation and recall
+value is measured from the actual search); only wall-clock latency/QPS come
+from the measured device model (core/device_model.py) applied to the counts.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.searchutils import (INF, SENTINEL, dedup_merge_topL, sq_dists,
-                                    top_w_unexpanded)
+from repro.core.search_kernel import search_batched
+from repro.core.stats import QueryStats, SearchResult  # noqa: F401 (re-export)
+from repro.io import build_store
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,189 +58,26 @@ class SearchConfig:
     pipeline: bool = False
     pipeline_spec: int = 2       # speculative reads per step
 
+    def __post_init__(self):
+        if self.k > self.L:
+            raise ValueError(
+                f"k={self.k} must be <= L={self.L}: the candidate pool "
+                f"must hold at least the k results it returns")
+        if self.dw_min > self.dw_max:
+            raise ValueError(
+                f"dw_min={self.dw_min} must be <= dw_max={self.dw_max} "
+                f"(DynamicWidth doubles the beam from dw_min up to dw_max)")
+        if not 0.0 <= self.cache_frac <= 1.0:
+            raise ValueError(
+                f"cache_frac={self.cache_frac} must be in [0, 1] "
+                f"(fraction of vertices pinned in memory)")
+        if self.pipeline_spec < 0:
+            raise ValueError(
+                f"pipeline_spec={self.pipeline_spec} must be >= 0 "
+                f"(speculative reads per step)")
+
     def replace(self, **kw):
         return dataclasses.replace(self, **kw)
-
-
-@dataclasses.dataclass
-class SearchResult:
-    ids: np.ndarray            # (B, k)
-    dists: np.ndarray          # (B, k)
-    hops: np.ndarray           # (B,)
-    page_reads: np.ndarray     # (B,) unique page fetches charged to SSD
-    cache_hits: np.ndarray     # (B,)
-    n_read_records: np.ndarray  # (B,) records fetched (N_read, Eq. 3)
-    n_eff: np.ndarray          # (B,) records actually expanded (N_eff)
-    full_evals: np.ndarray     # (B,) full-precision distance computations
-    pq_evals: np.ndarray       # (B,) ADC distance computations
-    mem_hops: np.ndarray       # (B,) MemGraph in-memory hops
-    mem_evals: np.ndarray      # (B,) MemGraph distance evals
-
-    def io_utilization(self):
-        return self.n_eff.sum() / max(self.n_read_records.sum(), 1)
-
-
-# ---------------------------------------------------------------------------
-
-
-@functools.partial(
-    jax.jit,
-    static_argnames=("k", "L", "width", "max_iters", "n_p", "page_search",
-                     "dynamic_width", "dw_min", "dw_max", "pipeline", "spec"))
-def _search_batch(page_vids, page_vecs, page_nbrs, vid2page, vid2slot,
-                  pq_centroids, pq_codes, cached, q, entries, entry_valid, *,
-                  k, L, width, max_iters, n_p, page_search, dynamic_width,
-                  dw_min, dw_max, pipeline, spec):
-    n = vid2page.shape[0]
-    m, ksub, dsub = pq_centroids.shape
-    width = max(width, dw_max) if dynamic_width else width
-    width = min(width, L)   # frontier can never exceed the candidate pool
-    w_cap = min(width + (spec if pipeline else 0), L)
-
-    def one(qv, ent, ent_ok):
-        lut = jnp.sum(jnp.square(pq_centroids
-                                 - qv.reshape(m, 1, dsub)), axis=-1)  # (M,256)
-
-        def pq_dist(ids):
-            safe = jnp.minimum(jnp.maximum(ids, 0), n - 1)
-            codes = pq_codes[safe]                      # (.., M)
-            d = jnp.take_along_axis(
-                lut.T, codes.astype(jnp.int32), axis=0)  # broadcast gather
-            # lut.T is (256, M); gather rows by code per column
-            return jnp.sum(d, axis=-1)
-
-        # candidate list: keys = [rank_key, exact_dist]; flags = [expanded,
-        # exact_known]
-        cap = L + w_cap * (n_p if page_search else 0) + w_cap * page_nbrs.shape[2]
-        e_pq = pq_dist(ent)
-        ids0 = jnp.where(ent_ok, ent, SENTINEL)
-        pad = cap - ids0.shape[0]
-        ids = jnp.concatenate([ids0, jnp.full((pad,), SENTINEL, jnp.int32)])
-        keys = jnp.stack([jnp.where(ent_ok, e_pq, INF),
-                          jnp.full(ids0.shape, INF)], 1)
-        keys = jnp.concatenate([keys, jnp.full((pad, 2), INF)], 0)
-        flags = jnp.zeros((cap, 2), bool)
-        ids, keys, flags = dedup_merge_topL(ids, keys, flags, L)
-
-        zero = jnp.zeros((), jnp.float32)
-        # metrics: pages, cache_hits, nread, neff, fulle, pqe, hops
-        met0 = (zero,) * 6
-        st0 = (ids, keys, flags, jnp.int32(0), jnp.float32(dw_min), zero) + met0
-
-        def cond(st):
-            ids, keys, flags, it = st[0], st[1], st[2], st[3]
-            open_ = jnp.any((ids < SENTINEL) & ~flags[:, 0]
-                            & (keys[:, 0] < INF))
-            return open_ & (it < max_iters)
-
-        def body(st):
-            (ids, keys, flags, it, w_dyn, stall,
-             pages_m, cache_m, nread_m, neff_m, full_m, pq_m_) = st
-            best_before = keys[0, 0]
-
-            w_now = (jnp.minimum(jnp.float32(dw_max), w_dyn)
-                     if dynamic_width else jnp.float32(width))
-            w_sel = jnp.minimum(w_now, jnp.float32(width)).astype(jnp.int32)
-            fidx, active = top_w_unexpanded(
-                keys[:, 0], flags[:, 0], ids < SENTINEL, w_cap,
-                w_dynamic=(w_sel + (spec if pipeline else 0)))
-            # pipeline: the first w_sel are confirmed, the rest speculative
-            fids = jnp.where(active, ids[fidx], SENTINEL)
-            neff_m = neff_m + jnp.sum(
-                active & (jnp.arange(w_cap) < w_sel))
-
-            # --- page fetch accounting --------------------------------------
-            safe_f = jnp.minimum(jnp.maximum(fids, 0), n - 1)
-            fpages = jnp.where(fids < SENTINEL, vid2page[safe_f], -1)
-            is_cached = (fids < SENTINEL) & cached[safe_f]
-            # unique non-cached pages this step
-            chargeable = jnp.where(is_cached, -1, fpages)
-            srt = jnp.sort(chargeable)
-            uniq = (srt >= 0) & jnp.concatenate(
-                [jnp.ones((1,), bool), srt[1:] != srt[:-1]])
-            pages_step = jnp.sum(uniq).astype(jnp.float32)
-            pages_m = pages_m + pages_step
-            cache_m = cache_m + jnp.sum(is_cached).astype(jnp.float32)
-            nread_m = nread_m + pages_step * n_p
-
-            # --- fetch records ----------------------------------------------
-            pg = jnp.maximum(fpages, 0)
-            rec_vids = page_vids[pg]                    # (w_cap, n_p)
-            rec_vecs = page_vecs[pg]                    # (w_cap, n_p, d)
-            rec_nbrs = page_nbrs[pg, vid2slot[safe_f]]  # (w_cap, R)
-            page_ok = (fids < SENTINEL)
-
-            # exact distance for every record on fetched pages
-            rd = jax.vmap(lambda vs: sq_dists(qv, vs))(rec_vecs)  # (w_cap,n_p)
-            rec_valid = (rec_vids >= 0) & page_ok[:, None]
-            full_m = full_m + jnp.sum(rec_valid).astype(jnp.float32)
-
-            # frontier's own exact distances (re-rank info, always used)
-            own = rec_vids == jnp.where(fids < SENTINEL, fids, -2)[:, None]
-            own_ids = jnp.where(page_ok, fids, SENTINEL)
-            own_d = jnp.where(page_ok,
-                              jnp.sum(jnp.where(own, rd, 0.0), 1), INF)
-
-            # --- assemble merge inputs --------------------------------------
-            parts_ids = [ids, own_ids]
-            parts_rank = [keys[:, 0], own_d]
-            parts_exact = [keys[:, 1], own_d]
-            parts_exp = [flags[:, 0], page_ok]
-            parts_exk = [flags[:, 1], page_ok]
-
-            if page_search:
-                pr_ids = jnp.where(rec_valid, rec_vids, SENTINEL).reshape(-1)
-                pr_d = jnp.where(rec_valid, rd, INF).reshape(-1)
-                parts_ids.append(pr_ids)
-                parts_rank.append(pr_d)
-                parts_exact.append(pr_d)
-                parts_exp.append(jnp.zeros_like(pr_ids, bool))
-                parts_exk.append(pr_ids < SENTINEL)
-
-            nb = jnp.where(page_ok[:, None] & (rec_nbrs >= 0),
-                           rec_nbrs, SENTINEL).reshape(-1)
-            nb_pq = jnp.where(nb < SENTINEL, pq_dist(nb), INF)
-            pq_m_ = pq_m_ + jnp.sum(nb < SENTINEL).astype(jnp.float32)
-            parts_ids.append(nb)
-            parts_rank.append(nb_pq)
-            parts_exact.append(jnp.full_like(nb_pq, INF))
-            parts_exp.append(jnp.zeros_like(nb, bool))
-            parts_exk.append(jnp.zeros_like(nb, bool))
-
-            all_ids = jnp.concatenate(parts_ids)
-            all_keys = jnp.stack([jnp.concatenate(parts_rank),
-                                  jnp.concatenate(parts_exact)], 1)
-            all_flags = jnp.stack([jnp.concatenate(parts_exp),
-                                   jnp.concatenate(parts_exk)], 1)
-            ids, keys, flags = dedup_merge_topL(all_ids, all_keys, all_flags, L)
-            # expanded entries keep exact distance as ranking key
-            keys = keys.at[:, 0].set(
-                jnp.where(flags[:, 1], keys[:, 1], keys[:, 0]))
-
-            # dynamic width phase detection: no improvement => converge phase
-            improved = keys[0, 0] < best_before
-            stall = jnp.where(improved, 0.0, stall + 1.0)
-            w_dyn = jnp.where(dynamic_width & (stall > 0),
-                              jnp.minimum(w_dyn * 2.0, jnp.float32(dw_max)),
-                              w_dyn)
-            return (ids, keys, flags, it + 1, w_dyn, stall,
-                    pages_m, cache_m, nread_m, neff_m, full_m, pq_m_)
-
-        out = jax.lax.while_loop(cond, body, st0)
-        ids, keys, flags, it = out[0], out[1], out[2], out[3]
-        pages_m, cache_m, nread_m, neff_m, full_m, pq_m_ = out[6:12]
-
-        # final top-k by exact distance (re-rank among exact-known)
-        final_key = jnp.where(flags[:, 1], keys[:, 1], INF)
-        order = jnp.argsort(final_key)[:k]
-        topk = jnp.where(final_key[order] < INF, ids[order], -1)
-        topd = final_key[order]
-        return {"ids": topk, "dists": topd, "hops": it,
-                "page_reads": pages_m, "cache_hits": cache_m,
-                "n_read": nread_m, "n_eff": neff_m,
-                "full_evals": full_m, "pq_evals": pq_m_}
-
-    return jax.vmap(one)(q, entries, entry_valid)
 
 
 # ---------------------------------------------------------------------------
@@ -255,7 +85,9 @@ def _search_batch(page_vids, page_vecs, page_nbrs, vid2page, vid2slot,
 
 class DiskIndex:
     """Bundles layout + PQ + optional cache/memgraph; see core/presets.py
-    and core/builder.py for construction."""
+    and core/builder.py for construction. `search` is a thin compatibility
+    facade over the io/kernel layers; the serving layer drives the same
+    kernel through `page_store()` + search_kernel.search_batched."""
 
     def __init__(self, layout, pq, graph, medoid, cfg: SearchConfig,
                  memgraph=None, cached: Optional[np.ndarray] = None,
@@ -269,6 +101,7 @@ class DiskIndex:
         n = graph.shape[0]
         self.cached = (cached if cached is not None else np.zeros(n, bool))
         self.build_stats = build_stats or {}
+        self._stores = {}
 
     def memory_bytes(self) -> int:
         b = self.pq.memory_bytes if not self.cfg.all_in_storage else 0
@@ -278,49 +111,26 @@ class DiskIndex:
         b += self.layout.mapping_bytes
         return b
 
+    def page_store(self, use_cache: bool = True, batched: bool = False):
+        """The index's I/O-layer view: array store + cache decorator (when
+        the index holds a cache and the caller wants it) + optional batch
+        coalescer. Memoized per (use_cache, batched) so repeated searches
+        share counters and the kernel's device-array cache."""
+        key = (bool(use_cache and self.cached.any()), batched)
+        if key not in self._stores:
+            self._stores[key] = build_store(
+                self.layout,
+                cached_vertices=self.cached if key[0] else None,
+                batched=batched)
+        return self._stores[key]
+
     def search(self, queries: np.ndarray, cfg: Optional[SearchConfig] = None,
-               batch: int = 256) -> SearchResult:
+               batch: int = 256) -> QueryStats:
         cfg = cfg or self.cfg
         # the cache only serves reads when the search config enables it
-        cached = (self.cached if cfg.cache_frac > 0
-                  else np.zeros_like(self.cached))
-        outs = []
-        for s in range(0, len(queries), batch):
-            qb = np.asarray(queries[s:s + batch], np.float32)
-            if self.memgraph is not None and cfg.memgraph_frac > 0:
-                mg = self.memgraph.entry_points(
-                    qb, n_entries=cfg.memgraph_entries, L=cfg.memgraph_L)
-                entries = mg["entries"]
-                mem_hops, mem_evals = mg["hops"], mg["dist_evals"]
-            else:
-                entries = np.full((len(qb), 1), self.medoid, np.int32)
-                mem_hops = np.zeros(len(qb), np.int32)
-                mem_evals = np.zeros(len(qb), np.int32)
-            valid = entries >= 0
-            res = _search_batch(
-                jnp.asarray(self.layout.page_vids),
-                jnp.asarray(self.layout.page_vecs),
-                jnp.asarray(self.layout.page_nbrs),
-                jnp.asarray(self.layout.vid2page),
-                jnp.asarray(self.layout.vid2slot),
-                jnp.asarray(self.pq.centroids), jnp.asarray(self.pq.codes),
-                jnp.asarray(cached),
-                jnp.asarray(qb), jnp.asarray(entries), jnp.asarray(valid),
-                k=cfg.k, L=cfg.L, width=cfg.beam_width,
-                max_iters=cfg.max_iters, n_p=self.layout.n_p,
-                page_search=cfg.page_search,
-                dynamic_width=cfg.dynamic_width, dw_min=cfg.dw_min,
-                dw_max=cfg.dw_max, pipeline=cfg.pipeline,
-                spec=cfg.pipeline_spec)
-            res = {k_: np.asarray(v) for k_, v in res.items()}
-            res["mem_hops"] = mem_hops
-            res["mem_evals"] = mem_evals
-            outs.append(res)
-
-        cat = {k_: np.concatenate([o[k_] for o in outs]) for k_ in outs[0]}
-        return SearchResult(
-            ids=cat["ids"], dists=cat["dists"], hops=cat["hops"],
-            page_reads=cat["page_reads"], cache_hits=cat["cache_hits"],
-            n_read_records=cat["n_read"], n_eff=cat["n_eff"],
-            full_evals=cat["full_evals"], pq_evals=cat["pq_evals"],
-            mem_hops=cat["mem_hops"], mem_evals=cat["mem_evals"])
+        store = self.page_store(use_cache=cfg.cache_frac > 0)
+        # facade callers never batch across queries — skip the per-query
+        # visited-page bitmaps (serving goes through search_batched itself)
+        return search_batched(store, self.pq, cfg, queries,
+                              medoid=self.medoid, memgraph=self.memgraph,
+                              batch=batch, collect_visited=False)

@@ -1,0 +1,6 @@
+from repro.io.page_store import (ArrayPageStore, BatchedPageStore,
+                                 CachedPageStore, PageStore, StoreCounters,
+                                 build_store)
+
+__all__ = ["ArrayPageStore", "BatchedPageStore", "CachedPageStore",
+           "PageStore", "StoreCounters", "build_store"]

@@ -1,0 +1,250 @@
+"""I/O layer: the PageStore contract and its three implementations.
+
+A `PageStore` is the only thing the kernel/serving layers know about the
+"disk": it hands out page records on `fetch`, exposes the raw page arrays
+the jitted kernel indexes (`kernel_arrays`), and keeps read/hit counters so
+every layer accounts I/O through one object instead of ad-hoc fields.
+
+  ArrayPageStore    — base store over a PageLayout's arrays (the simulated
+                      SSD; every fetched page is a charged read).
+  CachedPageStore   — decorator carrying the vertex cache mask (§4.1.2):
+                      fetches for cached vertices are memory hits, and the
+                      mask is what the kernel consumes to zero-charge
+                      frontier reads of cached vertices.
+  BatchedPageStore  — decorator that coalesces duplicate page requests
+                      across the queries of a batch (cross-query dedup) —
+                      the I/O reduction per-query accounting cannot express
+                      and the serving layer's batch scheduler relies on.
+
+The contract (duck-typed; see PageStore Protocol):
+  fetch(page_ids, vids=None) -> dict(vids, vecs, nbrs)   [+ counters moving]
+  kernel_arrays() -> (page_vids, page_vecs, page_nbrs, vid2page, vid2slot)
+  vertex_cache_mask() -> (n,) bool
+  note_kernel_io(stats)   — fold kernel-measured reads/hits into counters
+  counters: StoreCounters
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Protocol, runtime_checkable
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class StoreCounters:
+    pages_requested: int = 0   # pages callers asked for
+    pages_fetched: int = 0     # pages actually charged to the device
+    cache_hits: int = 0        # requests served from memory
+    records_fetched: int = 0   # records moved (pages_fetched * n_p)
+
+    def reset(self) -> None:
+        self.pages_requested = 0
+        self.pages_fetched = 0
+        self.cache_hits = 0
+        self.records_fetched = 0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@runtime_checkable
+class PageStore(Protocol):
+    """Anything that can serve pages to the kernel and serving layers."""
+
+    counters: StoreCounters
+
+    def fetch(self, page_ids: np.ndarray,
+              vids: Optional[np.ndarray] = None) -> dict: ...
+
+    def kernel_arrays(self) -> tuple: ...
+
+    def vertex_cache_mask(self) -> np.ndarray: ...
+
+    def note_kernel_io(self, stats) -> None: ...
+
+
+class ArrayPageStore:
+    """Base store: a PageLayout's arrays stand in for the SSD. Every page in
+    `fetch` is one charged read (callers dedup; see BatchedPageStore)."""
+
+    def __init__(self, layout):
+        self.layout = layout
+        self.counters = StoreCounters()
+        self._kernel_cache = None
+
+    @property
+    def num_pages(self) -> int:
+        return self.layout.num_pages
+
+    def fetch(self, page_ids: np.ndarray,
+              vids: Optional[np.ndarray] = None) -> dict:
+        page_ids = np.asarray(page_ids, np.int64).reshape(-1)
+        if np.any((page_ids < 0) | (page_ids >= self.layout.num_pages)):
+            raise IndexError("page id out of range")
+        self.counters.pages_requested += len(page_ids)
+        self.counters.pages_fetched += len(page_ids)
+        self.counters.records_fetched += len(page_ids) * self.layout.n_p
+        return {"vids": self.layout.page_vids[page_ids],
+                "vecs": self.layout.page_vecs[page_ids],
+                "nbrs": self.layout.page_nbrs[page_ids]}
+
+    def kernel_arrays(self) -> tuple:
+        if self._kernel_cache is None:
+            lay = self.layout
+            self._kernel_cache = tuple(jnp.asarray(a) for a in (
+                lay.page_vids, lay.page_vecs, lay.page_nbrs,
+                lay.vid2page, lay.vid2slot))
+        return self._kernel_cache
+
+    def vertex_cache_mask(self) -> np.ndarray:
+        return np.zeros(self.layout.vid2page.shape[0], bool)
+
+    def note_kernel_io(self, stats) -> None:
+        pages = int(stats.page_reads.sum())
+        self.counters.pages_requested += pages
+        self.counters.pages_fetched += pages
+        self.counters.records_fetched += int(stats.n_read_records.sum())
+
+
+class CachedPageStore:
+    """Decorator: a vertex cache mask in front of an inner store. A fetch
+    that names its requesting vertices (`vids`) serves cached vertices from
+    memory (hits) and forwards only the rest; the same mask is exported to
+    the kernel, which zero-charges frontier reads of cached vertices."""
+
+    def __init__(self, inner, cached_vertices: np.ndarray):
+        self.inner = inner
+        self.cached_vertices = np.asarray(cached_vertices, bool)
+        self.counters = StoreCounters()
+
+    @property
+    def layout(self):
+        return self.inner.layout
+
+    @property
+    def num_pages(self) -> int:
+        return self.inner.num_pages
+
+    def fetch(self, page_ids: np.ndarray,
+              vids: Optional[np.ndarray] = None) -> dict:
+        page_ids = np.asarray(page_ids, np.int64).reshape(-1)
+        self.counters.pages_requested += len(page_ids)
+        if vids is None:
+            self.counters.pages_fetched += len(page_ids)
+            return self.inner.fetch(page_ids)
+        vids = np.asarray(vids, np.int64).reshape(-1)
+        hit = self.cached_vertices[vids]
+        self.counters.cache_hits += int(hit.sum())
+        self.counters.pages_fetched += int((~hit).sum())
+        out = self.inner.fetch(page_ids[~hit])
+        # cached vertices' records come from memory: single-record "pages"
+        lay = self.layout
+        hv = vids[hit]
+        out["cached_vids"] = hv.astype(np.int32)
+        out["cached_vecs"] = lay.page_vecs[lay.vid2page[hv], lay.vid2slot[hv]]
+        out["cached_nbrs"] = lay.page_nbrs[lay.vid2page[hv], lay.vid2slot[hv]]
+        return out
+
+    def kernel_arrays(self) -> tuple:
+        return self.inner.kernel_arrays()
+
+    def vertex_cache_mask(self) -> np.ndarray:
+        return self.cached_vertices
+
+    def note_kernel_io(self, stats) -> None:
+        self.counters.cache_hits += int(stats.cache_hits.sum())
+        pages = int(stats.page_reads.sum())
+        self.counters.pages_requested += pages
+        self.counters.pages_fetched += pages
+        self.inner.note_kernel_io(stats)
+
+
+class BatchedPageStore:
+    """Decorator: coalesce duplicate page requests across the queries of a
+    batch. `fetch` dedups a flat request list; `fetch_for_queries` takes
+    per-query charged-page bitmaps (QueryStats.visited_pages) and issues the
+    union once — the cross-query I/O reduction the paper's per-query
+    accounting cannot express. `savings()` reports requested - issued."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.counters = StoreCounters()
+
+    @property
+    def layout(self):
+        return self.inner.layout
+
+    @property
+    def num_pages(self) -> int:
+        return self.inner.num_pages
+
+    def fetch(self, page_ids: np.ndarray,
+              vids: Optional[np.ndarray] = None) -> dict:
+        page_ids = np.asarray(page_ids, np.int64).reshape(-1)
+        self.counters.pages_requested += len(page_ids)
+        if vids is not None:
+            # vertex-granular requests can name several records on one page,
+            # so page coalescing doesn't apply — pass through to the inner
+            # store (which may serve cache hits) uncoalesced, and mirror the
+            # pages it actually charged to the device
+            before = self.inner.counters.pages_fetched
+            out = self.inner.fetch(page_ids, vids=vids)
+            self.counters.pages_fetched += \
+                self.inner.counters.pages_fetched - before
+            return out
+        uniq, inv = np.unique(page_ids, return_inverse=True)
+        self.counters.pages_fetched += len(uniq)
+        out = self.inner.fetch(uniq)
+        # scatter back so callers see one record-set per requested page
+        return {k: v[inv] for k, v in out.items()}
+
+    def fetch_for_queries(self, visited_pages: np.ndarray) -> dict:
+        """visited_pages: (B, num_pages) bool per-query charged-page bitmaps.
+        Issues the cross-query union once; returns the union's records plus
+        the accounting from coalesce()."""
+        acct = self.coalesce(visited_pages)
+        union = np.flatnonzero(np.asarray(visited_pages, bool).any(axis=0))
+        out = self.inner.fetch(union)
+        out.update(acct)
+        return out
+
+    def coalesce(self, visited_pages: np.ndarray) -> dict:
+        """Accounting-only variant of fetch_for_queries for the serving hot
+        path: moves the same counters but skips materializing the union's
+        records (the kernel already holds the page arrays, so re-copying
+        vectors/neighbors per batch would be pure waste)."""
+        visited_pages = np.asarray(visited_pages, bool)
+        requested = int(visited_pages.sum())
+        issued = int(visited_pages.any(axis=0).sum())
+        self.counters.pages_requested += requested
+        self.counters.pages_fetched += issued
+        self.counters.records_fetched += issued * self.layout.n_p
+        return {"requested": requested, "issued": issued}
+
+    def savings(self) -> int:
+        return self.counters.pages_requested - self.counters.pages_fetched
+
+    def kernel_arrays(self) -> tuple:
+        return self.inner.kernel_arrays()
+
+    def vertex_cache_mask(self) -> np.ndarray:
+        return self.inner.vertex_cache_mask()
+
+    def note_kernel_io(self, stats) -> None:
+        # kernel-internal reads are per-query; batching accounts its own
+        # fetches in fetch_for_queries, so only forward to the inner store
+        self.inner.note_kernel_io(stats)
+
+
+def build_store(layout, cached_vertices: Optional[np.ndarray] = None,
+                batched: bool = False):
+    """Compose the standard store stack for an index: array base, optional
+    vertex-cache decorator, optional batch-coalescing decorator."""
+    store = ArrayPageStore(layout)
+    if cached_vertices is not None and cached_vertices.any():
+        store = CachedPageStore(store, cached_vertices)
+    if batched:
+        store = BatchedPageStore(store)
+    return store

@@ -1,0 +1,3 @@
+from repro.serving.ann_server import AnnServer, ServerConfig, ServingReport
+
+__all__ = ["AnnServer", "ServerConfig", "ServingReport"]

@@ -1,0 +1,205 @@
+"""Serving layer: a closed-loop concurrent ANN query server.
+
+W closed-loop clients each keep one query in flight: submit, wait for the
+result, immediately submit the next (the paper's concurrency axis, §8 —
+queue depth is set by the client count, not an open arrival rate). Queries
+land in a queue; a dynamic batch scheduler (max-batch / max-wait) drains it;
+each batch executes on the shared search kernel with page data served
+through a `BatchedPageStore`, so duplicate page requests across the batch's
+queries are coalesced into one device read.
+
+Search execution is REAL (the jitted kernel runs every query; hops, pages,
+distance evals and result ids are measured). Time is VIRTUAL: the container
+has no NVMe, so the clock advances by the paper-measured device model —
+`SSDModel.concurrent_latency_us(queue_depth, ...)` with queue depth equal to
+the number of in-flight queries, and the batch coalescing rebate applied to
+the page volume. Latency therefore includes queue wait + device service; QPS
+is completed queries over elapsed virtual time.
+
+Batches are padded to `max_batch` with duplicates of the batch's first query
+so the kernel compiles exactly once per (config, max_batch); padding rows
+are dropped from all accounting (and add nothing to the page union — the
+duplicate query visits the same pages).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.device_model import SSDModel
+from repro.core.search_kernel import search_batched
+from repro.core.stats import QueryStats
+from repro.io import build_store
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerConfig:
+    max_batch: int = 16          # dynamic batcher: dispatch when this full...
+    max_wait_us: float = 200.0   # ...or this long after the first enqueue
+    pad_batches: bool = True     # pad to max_batch (one kernel compilation)
+
+
+@dataclasses.dataclass
+class ServingReport:
+    workers: int
+    queries: int
+    elapsed_us: float
+    qps: float
+    mean_latency_us: float       # submit -> complete, queue wait included
+    p99_latency_us: float
+    mean_service_us: float       # dispatch -> complete (no queue wait)
+    mean_batch_size: float
+    pages_per_query: float           # per-query kernel accounting
+    batched_pages_per_query: float   # after cross-query coalescing
+    dedup_saved_frac: float          # 1 - issued/requested
+    stats: QueryStats            # per-query search stats, dispatch order
+    query_indices: np.ndarray    # (queries,) index into the submitted pool
+
+    def row(self) -> dict:
+        return {
+            "workers": self.workers, "queries": self.queries,
+            "qps": round(self.qps, 1),
+            "mean_latency_us": round(self.mean_latency_us, 1),
+            "p99_latency_us": round(self.p99_latency_us, 1),
+            "mean_batch": round(self.mean_batch_size, 2),
+            "pages_per_query": round(self.pages_per_query, 2),
+            "batched_pages_per_query": round(self.batched_pages_per_query, 2),
+            "dedup_saved_frac": round(self.dedup_saved_frac, 4),
+        }
+
+
+class AnnServer:
+    """Closed-loop concurrent query server over a DiskIndex."""
+
+    def __init__(self, index, cfg=None, model: Optional[SSDModel] = None,
+                 server_cfg: Optional[ServerConfig] = None):
+        self.index = index
+        self.cfg = cfg or index.cfg
+        self.model = model or SSDModel()
+        self.server_cfg = server_cfg or ServerConfig()
+        # a fresh store stack with batch coalescing on top — the server's
+        # I/O counters must not leak into the facade's memoized stores
+        use_cache = self.cfg.cache_frac > 0 and index.cached.any()
+        self.store = build_store(
+            index.layout,
+            cached_vertices=index.cached if use_cache else None,
+            batched=True)
+
+    # -- batch executor ------------------------------------------------------
+
+    def _execute(self, qvecs: np.ndarray) -> QueryStats:
+        """Run one batch through the kernel, padded to max_batch so the jit
+        cache holds exactly one entry per (config, max_batch)."""
+        b = len(qvecs)
+        mb = self.server_cfg.max_batch
+        if self.server_cfg.pad_batches and b < mb:
+            qvecs = np.concatenate(
+                [qvecs, np.repeat(qvecs[:1], mb - b, axis=0)])
+        stats = search_batched(
+            self.store, self.index.pq, self.cfg, qvecs,
+            medoid=self.index.medoid, memgraph=self.index.memgraph,
+            batch=len(qvecs), account_kernel_io=False)
+        return stats.take(b)
+
+    def _batch_times_us(self, stats: QueryStats, depth: int, d: int):
+        """Per-query service latencies for one batch at the given device
+        queue depth, plus (requested, issued) page counts after the batch
+        store coalesced duplicate reads across the batch's queries."""
+        acct = self.store.coalesce(stats.visited_pages)
+        requested, issued = acct["requested"], acct["issued"]
+        dedup = issued / requested if requested else 1.0
+        # the batch store holds a page for the whole batch, so each query is
+        # charged its DISTINCT pages (step revisits are buffer hits), scaled
+        # by the cross-query coalescing rebate: charges sum to the union
+        distinct = stats.visited_pages.sum(axis=1).astype(np.float64)
+        lat = self.model.concurrent_latency_us(
+            depth,
+            hops=stats.hops.astype(np.float64),
+            pages=distinct,
+            full_evals=stats.full_evals.astype(np.float64),
+            pq_evals=stats.pq_evals.astype(np.float64),
+            mem_evals=stats.mem_evals.astype(np.float64),
+            d=d, pq_m=self.cfg.pq_m, page_bytes=self.cfg.page_bytes,
+            pipeline=self.cfg.pipeline, page_dedup=dedup)
+        return np.asarray(lat, np.float64), requested, issued
+
+    # -- closed loop ---------------------------------------------------------
+
+    def serve_closed_loop(self, queries: np.ndarray, workers: int,
+                          rounds: int = 1) -> ServingReport:
+        """W clients, one outstanding query each, `rounds` queries per
+        client, query vectors drawn round-robin from `queries`."""
+        queries = np.asarray(queries, np.float32)
+        d = queries.shape[1]
+        scfg = self.server_cfg
+        total = workers * rounds
+        # (submit_time, client, query_index); heap orders by time
+        events: List[tuple] = [(0.0, c, c % len(queries))
+                               for c in range(workers)]
+        heapq.heapify(events)
+        issued = [1] * workers      # queries issued per client so far
+        exec_free = 0.0
+        lat_out, qidx_out, stats_out = [], [], []
+        service_out, batch_sizes = [], []
+        requested_total = issued_total = 0
+        t_end = 0.0
+
+        while events:
+            t0, c0, q0 = heapq.heappop(events)
+            batch = [(t0, c0, q0)]
+            deadline = t0 + scfg.max_wait_us
+            while events and len(batch) < scfg.max_batch \
+                    and events[0][0] <= deadline:
+                batch.append(heapq.heappop(events))
+            # dispatch when full, at the wait deadline, or when the executor
+            # frees up — whichever binds. Closed loop: if no submission is
+            # outstanding, nothing can arrive before this batch completes,
+            # so there is no point waiting out max_wait
+            if len(batch) == scfg.max_batch or not events:
+                t_fill = batch[-1][0]
+            else:
+                t_fill = deadline
+            dispatch = max(exec_free, t_fill)
+            while events and len(batch) < scfg.max_batch \
+                    and events[0][0] <= dispatch:
+                batch.append(heapq.heappop(events))
+
+            qvecs = queries[[q for _, _, q in batch]]
+            stats = self._execute(qvecs)
+            # device queue depth = queries in flight in this batch
+            lat, req_pages, uniq_pages = self._batch_times_us(
+                stats, len(batch), d)
+            requested_total += req_pages
+            issued_total += uniq_pages
+            done = dispatch + lat
+            exec_free = dispatch + float(lat.max())
+            t_end = max(t_end, exec_free)
+            batch_sizes.append(len(batch))
+            for (t_sub, c, q), t_done in zip(batch, done):
+                lat_out.append(t_done - t_sub)
+                service_out.append(t_done - dispatch)
+                qidx_out.append(q)
+                if issued[c] < rounds:
+                    nxt = (c + issued[c] * workers) % len(queries)
+                    heapq.heappush(events, (float(t_done), c, nxt))
+                    issued[c] += 1
+            stats_out.append(stats)
+
+        all_stats = QueryStats.concat(stats_out)
+        lat_arr = np.asarray(lat_out)
+        return ServingReport(
+            workers=workers, queries=total, elapsed_us=t_end,
+            qps=total / (t_end * 1e-6) if t_end > 0 else 0.0,
+            mean_latency_us=float(lat_arr.mean()),
+            p99_latency_us=float(np.percentile(lat_arr, 99)),
+            mean_service_us=float(np.mean(service_out)),
+            mean_batch_size=float(np.mean(batch_sizes)),
+            pages_per_query=float(all_stats.page_reads.mean()),
+            batched_pages_per_query=issued_total / total,
+            dedup_saved_frac=(1.0 - issued_total / requested_total
+                              if requested_total else 0.0),
+            stats=all_stats,
+            query_indices=np.asarray(qidx_out, np.int64))

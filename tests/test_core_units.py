@@ -1,68 +1,82 @@
-"""Property-based tests (hypothesis) for the engine's invariants + unit tests
-for PQ / layouts / Vamana pruning."""
+"""Property-based tests (hypothesis, optional) for the engine's invariants +
+unit tests for PQ / layouts / Vamana pruning. When hypothesis is not
+installed the property tests skip and the rest of the module still runs."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.core.searchutils import INF, SENTINEL, dedup_merge_topL
 
-
-@st.composite
-def id_key_flag_arrays(draw):
-    n = draw(st.integers(2, 80))
-    ids = draw(st.lists(st.integers(0, 20), min_size=n, max_size=n))
-    # XLA flushes subnormals to zero; keep keys in the normal f32 range
-    keys = draw(st.lists(
-        st.floats(9.999999974752427e-07, 1e6, allow_nan=False, width=32),
-        min_size=n, max_size=n))
-    flags = draw(st.lists(st.booleans(), min_size=n, max_size=n))
-    L = draw(st.integers(1, n))
-    return ids, keys, flags, L
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - depends on the environment
+    HAS_HYPOTHESIS = False
 
 
-@given(id_key_flag_arrays())
-@settings(max_examples=60, deadline=None)
-def test_dedup_merge_properties(data):
-    ids, keys, flags, L = data
-    i, k, f = dedup_merge_topL(
-        jnp.asarray(ids, jnp.int32),
-        jnp.asarray(keys, jnp.float32)[:, None],
-        jnp.asarray(flags, bool)[:, None], L)
-    i, k, f = np.asarray(i), np.asarray(k[:, 0]), np.asarray(f[:, 0])
-    real = i[i < int(SENTINEL)]
-    # unique ids
-    assert len(set(real.tolist())) == len(real)
-    # sorted by key
-    kk = k[: len(real)]
-    assert np.all(np.diff(kk) >= -1e-6)
-    # min-key and OR-flag per id (exact reference)
-    want = {}
-    for id_, key_, fl in zip(ids, keys, flags):
-        if id_ not in want:
-            want[id_] = [key_, fl]
-        else:
-            want[id_][0] = min(want[id_][0], key_)
-            want[id_][1] = want[id_][1] or fl
-    for idx, id_ in enumerate(real.tolist()):
-        np.testing.assert_allclose(k[idx], want[id_][0], rtol=1e-6)
-        assert f[idx] == want[id_][1]
-    # top-L: kept keys <= smallest dropped key
-    if len(want) > L:
-        dropped = sorted(v[0] for v in want.values())[L:]
-        assert kk[-1] <= dropped[0] + 1e-6
+if HAS_HYPOTHESIS:
+    @st.composite
+    def id_key_flag_arrays(draw):
+        n = draw(st.integers(2, 80))
+        ids = draw(st.lists(st.integers(0, 20), min_size=n, max_size=n))
+        # XLA flushes subnormals to zero; keep keys in the normal f32 range
+        keys = draw(st.lists(
+            st.floats(9.999999974752427e-07, 1e6, allow_nan=False, width=32),
+            min_size=n, max_size=n))
+        flags = draw(st.lists(st.booleans(), min_size=n, max_size=n))
+        L = draw(st.integers(1, n))
+        return ids, keys, flags, L
 
+    @given(id_key_flag_arrays())
+    @settings(max_examples=60, deadline=None)
+    def test_dedup_merge_properties(data):
+        ids, keys, flags, L = data
+        i, k, f = dedup_merge_topL(
+            jnp.asarray(ids, jnp.int32),
+            jnp.asarray(keys, jnp.float32)[:, None],
+            jnp.asarray(flags, bool)[:, None], L)
+        i, k, f = np.asarray(i), np.asarray(k[:, 0]), np.asarray(f[:, 0])
+        real = i[i < int(SENTINEL)]
+        # unique ids
+        assert len(set(real.tolist())) == len(real)
+        # sorted by key
+        kk = k[: len(real)]
+        assert np.all(np.diff(kk) >= -1e-6)
+        # min-key and OR-flag per id (exact reference)
+        want = {}
+        for id_, key_, fl in zip(ids, keys, flags):
+            if id_ not in want:
+                want[id_] = [key_, fl]
+            else:
+                want[id_][0] = min(want[id_][0], key_)
+                want[id_][1] = want[id_][1] or fl
+        for idx, id_ in enumerate(real.tolist()):
+            np.testing.assert_allclose(k[idx], want[id_][0], rtol=1e-6)
+            assert f[idx] == want[id_][1]
+        # top-L: kept keys <= smallest dropped key
+        if len(want) > L:
+            dropped = sorted(v[0] for v in want.values())[L:]
+            assert kk[-1] <= dropped[0] + 1e-6
 
-@given(st.integers(0, 2 ** 31 - 1))
-@settings(max_examples=30, deadline=None)
-def test_quantize_roundtrip_bounded(seed):
-    from repro.training.compression import dequantize, quantize
-    rng = np.random.default_rng(seed)
-    g = jnp.asarray(rng.normal(0, rng.uniform(1e-5, 10), (64,)), jnp.float32)
-    q, s = quantize(g)
-    err = np.abs(np.asarray(dequantize(q, s) - g))
-    assert err.max() <= float(s) / 2 + 1e-9  # half-ulp of the int8 grid
+    @given(st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=30, deadline=None)
+    def test_quantize_roundtrip_bounded(seed):
+        from repro.training.compression import dequantize, quantize
+        rng = np.random.default_rng(seed)
+        g = jnp.asarray(rng.normal(0, rng.uniform(1e-5, 10), (64,)),
+                        jnp.float32)
+        q, s = quantize(g)
+        err = np.abs(np.asarray(dequantize(q, s) - g))
+        assert err.max() <= float(s) / 2 + 1e-9  # half-ulp of the int8 grid
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_dedup_merge_properties():
+        pass
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_quantize_roundtrip_bounded():
+        pass
 
 
 def test_error_feedback_unbiased():

@@ -1,0 +1,38 @@
+"""Golden facade test (refactor acceptance): `DiskIndex.search` must produce
+identical ids / page_reads / hops / dists to the pre-refactor monolithic
+engine. tests/golden/facade_golden.npz was captured from the seed engine
+(commit 8d132d2) on the fixed-seed conftest dataset + graph, for four search
+configs covering the static kernel variants (page_search / dynamic_width /
+pipeline code paths)."""
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import get_preset
+
+GOLDEN = Path(__file__).parent / "golden" / "facade_golden.npz"
+PRESETS = ("baseline", "pagesearch", "dynamicwidth", "pipeline")
+
+
+@pytest.fixture(scope="module")
+def golden():
+    return np.load(GOLDEN)
+
+
+@pytest.mark.parametrize("preset", PRESETS)
+def test_facade_identical_to_pre_refactor_engine(preset, golden, base_index,
+                                                 small_dataset, small_graph):
+    _, med, _ = small_graph
+    assert med == int(golden["medoid"]), \
+        "fixture graph drifted from the golden capture"
+    cfg = get_preset(preset, L=48)
+    res = base_index.search(small_dataset.queries, cfg)
+    np.testing.assert_array_equal(res.ids, golden[f"{preset}_ids"])
+    np.testing.assert_array_equal(res.page_reads,
+                                  golden[f"{preset}_page_reads"])
+    np.testing.assert_array_equal(res.hops, golden[f"{preset}_hops"])
+    np.testing.assert_array_equal(res.cache_hits,
+                                  golden[f"{preset}_cache_hits"])
+    np.testing.assert_allclose(res.dists, golden[f"{preset}_dists"],
+                               rtol=1e-6)

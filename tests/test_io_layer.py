@@ -1,0 +1,256 @@
+"""I/O layer (repro/io) + kernel-stats (core/stats) unit tests: PageStore
+fetch/counter semantics, cross-query dedup in BatchedPageStore, QueryStats
+aggregation equivalence with the old SearchResult plumbing, SearchConfig
+validation, and the deduplicated SSDModel rate helpers. Everything here runs
+on tiny synthetic layouts — no graph build — so it is all `-m fast`."""
+import numpy as np
+import pytest
+
+from repro.core import QueryStats, SearchConfig, SearchResult, SSDModel
+from repro.core.pages import build_layout
+from repro.io import (ArrayPageStore, BatchedPageStore, CachedPageStore,
+                      PageStore, build_store)
+
+pytestmark = pytest.mark.fast
+
+
+@pytest.fixture()
+def tiny_layout():
+    rng = np.random.default_rng(0)
+    n, d, R = 64, 8, 4
+    vectors = rng.normal(size=(n, d)).astype(np.float32)
+    graph = rng.integers(0, n, (n, R)).astype(np.int32)
+    return build_layout(vectors, graph, page_bytes=256)
+
+
+# --- PageStore fetch / counter semantics -----------------------------------
+
+
+def test_array_store_fetch_and_counters(tiny_layout):
+    store = ArrayPageStore(tiny_layout)
+    assert isinstance(store, PageStore)
+    out = store.fetch([0, 1, 1])
+    assert out["vids"].shape == (3, tiny_layout.n_p)
+    np.testing.assert_array_equal(out["vids"][1], out["vids"][2])
+    np.testing.assert_allclose(out["vecs"][0], tiny_layout.page_vecs[0])
+    # base store charges every requested page (no dedup at this level)
+    assert store.counters.pages_requested == 3
+    assert store.counters.pages_fetched == 3
+    assert store.counters.records_fetched == 3 * tiny_layout.n_p
+    store.counters.reset()
+    assert store.counters.pages_fetched == 0
+    with pytest.raises(IndexError):
+        store.fetch([tiny_layout.num_pages])
+
+
+def test_cached_store_serves_hits_from_memory(tiny_layout):
+    inner = ArrayPageStore(tiny_layout)
+    n = tiny_layout.vid2page.shape[0]
+    cached = np.zeros(n, bool)
+    cached[:8] = True
+    store = CachedPageStore(inner, cached)
+    vids = np.asarray([2, 40, 50])        # vid 2 cached, others not
+    pages = tiny_layout.vid2page[vids]
+    out = store.fetch(pages, vids=vids)
+    assert store.counters.pages_requested == 3
+    assert store.counters.cache_hits == 1
+    assert store.counters.pages_fetched == 2
+    assert inner.counters.pages_fetched == 2   # only misses reach the device
+    # the cached record is returned from memory, contents intact
+    assert out["cached_vids"].tolist() == [2]
+    np.testing.assert_allclose(
+        out["cached_vecs"][0],
+        tiny_layout.page_vecs[tiny_layout.vid2page[2],
+                              tiny_layout.vid2slot[2]])
+    # the kernel consumes the same mask the decorator holds
+    np.testing.assert_array_equal(store.vertex_cache_mask(), cached)
+
+
+def test_batched_store_dedups_flat_requests(tiny_layout):
+    inner = ArrayPageStore(tiny_layout)
+    store = BatchedPageStore(inner)
+    out = store.fetch([3, 1, 3, 3, 1])
+    assert store.counters.pages_requested == 5
+    assert store.counters.pages_fetched == 2      # unique pages only
+    assert inner.counters.pages_fetched == 2
+    assert store.savings() == 3
+    # callers still see one record-set per requested page, in request order
+    np.testing.assert_array_equal(out["vids"][0], tiny_layout.page_vids[3])
+    np.testing.assert_array_equal(out["vids"][1], tiny_layout.page_vids[1])
+    np.testing.assert_array_equal(out["vids"][2], out["vids"][0])
+
+
+def test_batched_store_forwards_vertex_requests_to_cache(tiny_layout):
+    """Vertex-granular fetches can't be page-coalesced; they pass through so
+    an inner CachedPageStore still serves its hits."""
+    n = tiny_layout.vid2page.shape[0]
+    cached = np.zeros(n, bool)
+    cached[:4] = True
+    mid = CachedPageStore(ArrayPageStore(tiny_layout), cached)
+    store = BatchedPageStore(mid)
+    vids = np.asarray([1, 30, 30])          # vid 1 cached
+    out = store.fetch(tiny_layout.vid2page[vids], vids=vids)
+    assert mid.counters.cache_hits == 1
+    assert mid.counters.pages_fetched == 2  # uncoalesced pass-through
+    assert out["cached_vids"].tolist() == [1]
+
+
+def test_batched_store_coalesce_accounting_matches_fetch(tiny_layout):
+    """coalesce() is the record-free serving-path variant: identical counter
+    movement and accounting numbers as fetch_for_queries."""
+    visited = np.zeros((2, tiny_layout.num_pages), bool)
+    visited[0, [0, 1]] = True
+    visited[1, [1, 2]] = True
+    a = BatchedPageStore(ArrayPageStore(tiny_layout))
+    b = BatchedPageStore(ArrayPageStore(tiny_layout))
+    full = a.fetch_for_queries(visited)
+    acct = b.coalesce(visited)
+    assert (full["requested"], full["issued"]) == \
+        (acct["requested"], acct["issued"]) == (4, 3)
+    assert a.counters.as_dict() == b.counters.as_dict()
+
+
+def test_batched_store_cross_query_union(tiny_layout):
+    store = BatchedPageStore(ArrayPageStore(tiny_layout))
+    P = tiny_layout.num_pages
+    visited = np.zeros((3, P), bool)
+    visited[0, [0, 1, 2]] = True
+    visited[1, [1, 2, 3]] = True           # shares pages 1,2 with query 0
+    visited[2, [0, 3]] = True              # shares everything
+    out = store.fetch_for_queries(visited)
+    assert out["requested"] == 8           # per-query accounting
+    assert out["issued"] == 4              # union across the batch
+    assert out["issued"] < out["requested"]
+    assert store.savings() == 4
+
+
+def test_build_store_composition(tiny_layout):
+    n = tiny_layout.vid2page.shape[0]
+    plain = build_store(tiny_layout)
+    assert isinstance(plain, ArrayPageStore)
+    cached = build_store(tiny_layout, cached_vertices=np.ones(n, bool))
+    assert isinstance(cached, CachedPageStore)
+    stacked = build_store(tiny_layout, cached_vertices=np.ones(n, bool),
+                          batched=True)
+    assert isinstance(stacked, BatchedPageStore)
+    assert isinstance(stacked.inner, CachedPageStore)
+    assert stacked.vertex_cache_mask().all()
+    # a mask with no cached vertex composes no cache layer
+    assert isinstance(build_store(tiny_layout,
+                                  cached_vertices=np.zeros(n, bool)),
+                      ArrayPageStore)
+
+
+# --- QueryStats: aggregation equivalent to the old SearchResult path -------
+
+
+def _kernel_out(b, seed, with_visited=True):
+    rng = np.random.default_rng(seed)
+    out = {"ids": rng.integers(0, 100, (b, 10)),
+           "dists": rng.random((b, 10)),
+           "hops": rng.integers(1, 20, (b,)),
+           "page_reads": rng.integers(1, 50, (b,)).astype(np.float32),
+           "cache_hits": rng.integers(0, 5, (b,)).astype(np.float32),
+           "n_read": rng.integers(1, 200, (b,)).astype(np.float32),
+           "n_eff": rng.integers(1, 50, (b,)).astype(np.float32),
+           "full_evals": rng.integers(1, 500, (b,)).astype(np.float32),
+           "pq_evals": rng.integers(1, 900, (b,)).astype(np.float32),
+           "mem_hops": rng.integers(0, 9, (b,)),
+           "mem_evals": rng.integers(0, 90, (b,))}
+    if with_visited:
+        out["visited_pages"] = rng.random((b, 17)) < 0.3
+    return out
+
+
+def test_querystats_concat_matches_manual_concatenate():
+    """The old engine concatenated raw dicts per batch; QueryStats.concat
+    must produce exactly the same arrays."""
+    o1, o2 = _kernel_out(5, 1), _kernel_out(3, 2)
+    st = QueryStats.concat([QueryStats.from_kernel(o1),
+                            QueryStats.from_kernel(o2)])
+    assert len(st) == 8
+    for field, key in QueryStats._KERNEL_KEYS.items():
+        want = np.concatenate([o1[key], o2[key]])
+        np.testing.assert_array_equal(getattr(st, field), want, err_msg=field)
+    assert st.batch_unique_pages() == int(
+        np.concatenate([o1["visited_pages"],
+                        o2["visited_pages"]]).any(0).sum())
+
+
+def test_querystats_is_searchresult_and_summary_one_code_path():
+    from repro.core import summarize
+    assert SearchResult is QueryStats
+    st = QueryStats.from_kernel(_kernel_out(6, 3))
+    model = SSDModel()
+    s1 = st.summary(model, d=32, pq_m=16, page_bytes=4096)
+    s2 = summarize(model, st, d=32, pq_m=16, page_bytes=4096)
+    assert s1 == s2
+    assert s1["u_io"] > 0
+    assert s1["qps"] > 0 and s1["mean_latency_us"] > 0
+
+
+def test_querystats_take_drops_padding():
+    st = QueryStats.from_kernel(_kernel_out(8, 4))
+    st3 = st.take(3)
+    assert len(st3) == 3
+    np.testing.assert_array_equal(st3.ids, st.ids[:3])
+    np.testing.assert_array_equal(st3.visited_pages, st.visited_pages[:3])
+
+
+# --- SearchConfig validation -----------------------------------------------
+
+
+@pytest.mark.parametrize("kw,msg", [
+    (dict(k=20, L=16), "k=20 must be <= L=16"),
+    (dict(dynamic_width=True, dw_min=64, dw_max=32), "dw_min=64"),
+    (dict(cache_frac=-0.1), "cache_frac=-0.1"),
+    (dict(cache_frac=1.5), "cache_frac=1.5"),
+    (dict(pipeline=True, pipeline_spec=-1), "pipeline_spec=-1"),
+])
+def test_search_config_rejects_invalid(kw, msg):
+    with pytest.raises(ValueError, match=msg):
+        SearchConfig(**kw)
+
+
+def test_search_config_replace_revalidates():
+    cfg = SearchConfig()
+    with pytest.raises(ValueError):
+        cfg.replace(L=4)          # k=10 > L=4
+    assert cfg.replace(L=32).L == 32
+
+
+# --- SSDModel: deduplicated rates + concurrency extension ------------------
+
+
+def test_rates_helper_consistent_across_page_sizes():
+    m = SSDModel()
+    for pb in (4096, 8192, 16384):
+        iops, bw = m._rates(pb)
+        per_read = max(1.0 / iops, pb / bw)
+        assert m.page_service_us(pb) == pytest.approx(
+            per_read * m.workers * 1e6)
+    i4, _ = m._rates(4096)
+    i8, _ = m._rates(8192)
+    i16, _ = m._rates(16384)
+    assert i4 > i8 > i16          # 8K interpolates between 4K and 16K
+
+
+def test_concurrent_latency_matches_fixed_model_at_worker_depth():
+    m = SSDModel()
+    kw = dict(hops=np.array([10.0]), pages=np.array([40.0]),
+              full_evals=np.array([200.0]), pq_evals=np.array([900.0]),
+              mem_evals=np.array([0.0]), d=96, pq_m=16, page_bytes=4096)
+    base = m.query_latency_us(**kw)
+    np.testing.assert_allclose(m.concurrent_latency_us(m.workers, **kw), base)
+    # latency non-decreasing in queue depth; flat region below device knee
+    lats = [float(m.concurrent_latency_us(qd, **kw).mean())
+            for qd in (1, 2, 8, 48, 96, 192)]
+    assert all(b >= a for a, b in zip(lats, lats[1:])), lats
+    assert lats[-1] > lats[0]
+    # below the device's internal parallelism the latency is flat
+    assert lats[0] == lats[1] == lats[2], lats
+    assert lats[3] > lats[2]
+    # batch-coalescing rebate strictly reduces the I/O term
+    full = m.concurrent_latency_us(8, **kw)
+    rebated = m.concurrent_latency_us(8, page_dedup=0.5, **kw)
+    assert float(rebated.mean()) < float(full.mean())

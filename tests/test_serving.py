@@ -1,0 +1,83 @@
+"""Serving layer: closed-loop AnnServer behaviour on a real (small) index.
+
+Uses the session-scoped base_index fixture (2048-vector deep-like dataset),
+so these are not `-m fast` — the graph build dominates."""
+import numpy as np
+import pytest
+
+from repro.core import get_preset, recall_at_k
+from repro.serving import AnnServer, ServerConfig
+
+
+def _server(idx, cfg, max_batch=8, max_wait_us=200.0):
+    return AnnServer(idx, cfg, server_cfg=ServerConfig(
+        max_batch=max_batch, max_wait_us=max_wait_us))
+
+
+def test_server_results_match_facade(base_index, small_dataset):
+    """Batch padding / scheduling must not change per-query results: the
+    server returns exactly what DiskIndex.search returns for each query."""
+    cfg = get_preset("baseline", L=32)
+    srv = _server(base_index, cfg, max_batch=8)
+    rep = srv.serve_closed_loop(small_dataset.queries, workers=5, rounds=2)
+    want = base_index.search(small_dataset.queries, cfg)
+    np.testing.assert_array_equal(rep.stats.ids,
+                                  want.ids[rep.query_indices])
+    np.testing.assert_array_equal(rep.stats.page_reads,
+                                  want.page_reads[rep.query_indices])
+
+
+def test_batched_store_beats_per_query_accounting(base_index, small_dataset):
+    """Acceptance: on a shared-entry workload (every query starts at the
+    medoid) the cross-query coalescer issues strictly fewer page reads than
+    per-query accounting says were requested."""
+    srv = _server(base_index, get_preset("baseline", L=32), max_batch=8)
+    rep = srv.serve_closed_loop(small_dataset.queries, workers=16, rounds=1)
+    assert rep.dedup_saved_frac > 0.0
+    assert rep.batched_pages_per_query < rep.pages_per_query
+    c = srv.store.counters
+    assert 0 < c.pages_fetched < c.pages_requested
+
+
+def test_qps_monotone_nonincreasing_in_pages(base_index, small_dataset):
+    """Acceptance: closed-loop QPS is monotone non-increasing in mean
+    pages/query (sweep L, which drives page volume up)."""
+    rows = []
+    for L in (16, 32, 64):
+        srv = _server(base_index, get_preset("baseline", L=L), max_batch=8)
+        rep = srv.serve_closed_loop(small_dataset.queries, workers=8,
+                                    rounds=2)
+        rows.append((rep.pages_per_query, rep.qps))
+    rows.sort(key=lambda r: r[0])
+    pages = [r[0] for r in rows]
+    qps = [r[1] for r in rows]
+    assert pages[0] < pages[-1]                  # the sweep actually moved
+    assert all(b <= a * 1.001 for a, b in zip(qps, qps[1:])), rows
+
+
+def test_latency_grows_with_workers_past_knee(base_index, small_dataset):
+    """Closed loop: more clients -> deeper device queues -> higher per-query
+    latency, while QPS never degrades below the single-client point."""
+    cfg = get_preset("baseline", L=32)
+    srv = _server(base_index, cfg, max_batch=8)
+    reps = [srv.serve_closed_loop(small_dataset.queries, workers=w, rounds=1)
+            for w in (1, 16, 64)]
+    lats = [r.mean_latency_us for r in reps]
+    assert lats[0] < lats[-1], lats
+    assert reps[-1].qps >= reps[0].qps
+
+
+def test_server_recall_reasonable(base_index, small_dataset):
+    cfg = get_preset("baseline", L=64)
+    srv = _server(base_index, cfg)
+    rep = srv.serve_closed_loop(small_dataset.queries, workers=8, rounds=2)
+    rec = recall_at_k(rep.stats.ids, small_dataset.gt[rep.query_indices],
+                      cfg.k)
+    assert rec >= 0.9, rec
+
+
+def test_dynamic_batcher_respects_max_batch(base_index, small_dataset):
+    srv = _server(base_index, get_preset("baseline", L=16), max_batch=4)
+    rep = srv.serve_closed_loop(small_dataset.queries, workers=16, rounds=1)
+    assert rep.mean_batch_size <= 4.0
+    assert rep.queries == 16
