@@ -1,0 +1,97 @@
+"""Open-loop serving sweep: arrival rate x cache policy x prefetch.
+
+The paper's §8 guideline — storage-centric designs (Starling/OctopusANN:
+fewer pages per query) vs. hybrid designs (PipeANN: overlap I/O with
+compute) flip with concurrency — is really an *arrival rate* statement:
+under light open-loop load the device is idle and latency-hiding wins; as
+the offered rate approaches device saturation, throughput is decided purely
+by pages issued, so page-frugal designs (and a warm shared cache in front
+of them) win. This sweep drives `AnnServer.serve_open_loop` (Poisson
+arrivals, SLO-aware batching) across arrival rates and the stateful cache
+subsystem's policy space, reporting qps / p99 / hit-rate per cell.
+
+Env knobs (see benchmarks/common.py for the dataset sizing ones):
+  REPRO_OL_RATES      comma-separated arrival rates in QPS
+  REPRO_OL_DURATION   arrival window in us of virtual time
+"""
+from __future__ import annotations
+
+import os
+
+from benchmarks import common
+from repro.core import get_preset, recall_at_k
+from repro.serving import AnnServer, ServerConfig
+
+RATES = tuple(float(r) for r in os.environ.get(
+    "REPRO_OL_RATES", "2000,8000,32000,128000").split(","))
+DURATION_US = float(os.environ.get("REPRO_OL_DURATION", 20000.0))
+# (cache_policy, cache_pages, prefetch) cells; pages are multiplied by the
+# layout page size so the byte budget tracks the configured page_bytes
+POLICIES = (("none", 0, 0),
+            ("lru", 256, 0),
+            ("fifo", 256, 0),
+            ("2q", 256, 0),
+            ("lru", 256, 2))
+SYSTEMS = ("starling", "pipeann")   # storage-centric vs hybrid
+
+
+def sweep(name: str, preset: str, rates=RATES, policies=POLICIES,
+          L: int = 32, duration_us: float = DURATION_US, max_batch: int = 16,
+          slo_p99_us: float = None, **over):
+    ds = common.dataset(name)
+    cfg = get_preset(preset, L=L, **over)
+    idx = common.index(name, preset, **over)
+    rows = []
+    for policy, pages, prefetch in policies:
+        for rate in rates:
+            # fresh server per cell: each (rate, policy) measures its own
+            # cold-to-warm trajectory instead of inheriting the last cell's
+            server = AnnServer(idx, cfg, common.MODEL, ServerConfig(
+                max_batch=max_batch, cache_policy=policy,
+                cache_bytes=pages * idx.layout.page_bytes,
+                prefetch=prefetch, slo_p99_us=slo_p99_us))
+            rep = server.serve_open_loop(ds.queries, rate_qps=rate,
+                                         duration_us=duration_us)
+            rec = (recall_at_k(rep.stats.ids, ds.gt[rep.query_indices], cfg.k)
+                   if rep.completed else 0.0)
+            rows.append({"dataset": name, "system": preset, "L": L,
+                         "policy": policy, "cache_pages": pages,
+                         "prefetch": prefetch, **rep.row(),
+                         "recall@10": round(rec, 4)})
+    return rows
+
+
+def main(datasets=("sift-like",), systems=SYSTEMS, rates=RATES,
+         policies=POLICIES, L: int = 32, duration_us: float = DURATION_US):
+    rows = []
+    for ds in datasets:
+        for sysname in systems:
+            rows.extend(sweep(ds, sysname, rates=rates, policies=policies,
+                              L=L, duration_us=duration_us))
+    common.print_table(rows)
+
+    # the §8 crossover: best system per (rate, policy) at the extremes
+    for ds in datasets:
+        for rate in (min(rates), max(rates)):
+            at = {r["system"]: r for r in rows
+                  if r["dataset"] == ds and r["rate_qps"] == round(rate, 1)
+                  and r["policy"] == "none"}
+            if len(at) < 2:
+                continue
+            best = max(at, key=lambda s: at[s]["qps"])
+            print(f"# {ds} @ {rate:g} qps offered: best={best} "
+                  f"qps={at[best]['qps']} p99={at[best]['p99_latency_us']}")
+        # locality diagnostic: prefetch cells manufacture hits by
+        # construction (every looked-ahead page hits on its demand access),
+        # so only pure-cache cells say anything about page reuse
+        cached = [r for r in rows if r["dataset"] == ds
+                  and r["policy"] != "none" and r["prefetch"] == 0]
+        if cached:
+            best = max(cached, key=lambda r: r["cache_hit_rate"])
+            print(f"# {ds} best hit-rate (no prefetch): {best['policy']} "
+                  f"@ {best['rate_qps']:g} qps -> {best['cache_hit_rate']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

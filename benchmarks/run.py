@@ -21,8 +21,8 @@ def main() -> None:
     from benchmarks import (breakdown, build_overhead, cache_policy,
                             combinations, concurrency,
                             io_model, kernels, latency_breakdown,
-                            memory_budget, page_size, roofline, single_factor,
-                            sota)
+                            memory_budget, open_loop, page_size, roofline,
+                            single_factor, sota)
 
     sections = [
         ("kernels (microbench)", lambda: kernels.main()),
@@ -37,6 +37,10 @@ def main() -> None:
         ("sec8_concurrency_serving", lambda: concurrency.main(
             datasets if full else datasets[:1],
             workers=(1, 2, 4, 8, 16, 32, 64) if full else (1, 4, 16, 64))),
+        ("sec8_open_loop_cache_policies", lambda: open_loop.main(
+            datasets if full else datasets[:1],
+            rates=((2000.0, 8000.0, 32000.0, 128000.0) if full
+                   else (2000.0, 32000.0)))),
         ("fig22_breakdown", lambda: breakdown.main()),
         ("fig23_page_size", lambda: page_size.main()),
         ("fig15_memory_budget", lambda: memory_budget.main()),

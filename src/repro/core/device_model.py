@@ -88,17 +88,24 @@ class SSDModel:
 
     def concurrent_latency_us(self, queue_depth, *, hops, pages, full_evals,
                               pq_evals, mem_evals, d, pq_m, page_bytes,
-                              pipeline=False, page_dedup: float = 1.0):
+                              pipeline=False, page_dedup: float = 1.0,
+                              prefetch_overlap: float = 0.0):
         """Per-query latency with `queue_depth` queries in flight on the
         device. `page_dedup` (<= 1) rebates the page volume when a batch
-        scheduler coalesced duplicate reads (BatchedPageStore)."""
+        scheduler coalesced duplicate reads (BatchedPageStore).
+        `prefetch_overlap` (in [0, 1]) is the fraction of page service a
+        look-ahead prefetcher issued during the previous hop's compute
+        (PrefetchingPageStore): that I/O is hidden behind compute, but only
+        up to the compute actually available. Pipeline search already
+        overlaps I/O and compute wholesale, so the rebate is subsumed there."""
         t_page = self.concurrent_page_service_us(page_bytes, queue_depth)
         io = pages * page_dedup * t_page + hops * self.issue_us
         comp = self._compute_us(full_evals, pq_evals, mem_evals, d, pq_m)
         if pipeline:
             # per-step overlap approximated at query granularity
             return np.maximum(io, comp) + np.minimum(io, comp) * 0.1
-        return io + comp
+        hidden = np.minimum(io * np.clip(prefetch_overlap, 0.0, 1.0), comp)
+        return io + comp - hidden
 
     def qps(self, latency_us: np.ndarray, *, pages, page_bytes) -> float:
         """Throughput under `workers` concurrent queries, capped by device

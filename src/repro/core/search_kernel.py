@@ -12,6 +12,13 @@ scalar `page_reads` counter dedups pages only *within* a step (exactly the
 pre-refactor accounting, kept bit-identical for the golden facade test);
 the bitmap is what lets `BatchedPageStore` dedup across queries and steps.
 
+When `track_trace` is set it additionally emits `page_trace`, a
+(B, max_iters, w_cap) int32 array: row (b, h) holds the distinct pages
+query b charged at hop h, -1 padded — the same pages as the bitmap but in
+TEMPORAL order, which is what the stateful cache subsystem
+(repro/io/page_cache.py: LRU/FIFO/2Q replay, look-ahead prefetch) consumes.
+Both trackers are static flags, so untracked carries compile out entirely.
+
 Technique mapping (SearchConfig):
   PQ            — always on (the paper's §6 baseline): neighbors ranked by
                   memory-resident ADC distances; exact distances only for
@@ -49,11 +56,12 @@ from repro.core.stats import QueryStats
     jax.jit,
     static_argnames=("k", "L", "width", "max_iters", "n_p", "page_search",
                      "dynamic_width", "dw_min", "dw_max", "pipeline", "spec",
-                     "track_visited"))
+                     "track_visited", "track_trace"))
 def _search_batch(page_vids, page_vecs, page_nbrs, vid2page, vid2slot,
                   pq_centroids, pq_codes, cached, q, entries, entry_valid, *,
                   k, L, width, max_iters, n_p, page_search, dynamic_width,
-                  dw_min, dw_max, pipeline, spec, track_visited=True):
+                  dw_min, dw_max, pipeline, spec, track_visited=True,
+                  track_trace=False):
     n = vid2page.shape[0]
     num_pages = page_vids.shape[0]
     m, ksub, dsub = pq_centroids.shape
@@ -93,10 +101,14 @@ def _search_batch(page_vids, page_vecs, page_nbrs, vid2page, vid2slot,
         # the per-step scatter compiles out entirely (track_visited is
         # static).
         visited0 = jnp.zeros(((num_pages + 1) if track_visited else 1,), bool)
+        # trace[h] = the distinct pages charged at hop h (-1 padded); shrinks
+        # to (1, 1) and the row write compiles out when untracked
+        trace0 = jnp.full((max_iters, w_cap) if track_trace else (1, 1),
+                          -1, jnp.int32)
         # metrics: pages, cache_hits, nread, neff, fulle, pqe, hops
         met0 = (zero,) * 6
         st0 = (ids, keys, flags, jnp.int32(0), jnp.float32(dw_min),
-               zero, visited0) + met0
+               zero, visited0, trace0) + met0
 
         def cond(st):
             ids, keys, flags, it = st[0], st[1], st[2], st[3]
@@ -105,7 +117,7 @@ def _search_batch(page_vids, page_vecs, page_nbrs, vid2page, vid2slot,
             return open_ & (it < max_iters)
 
         def body(st):
-            (ids, keys, flags, it, w_dyn, stall, visited,
+            (ids, keys, flags, it, w_dyn, stall, visited, trace,
              pages_m, cache_m, nread_m, neff_m, full_m, pq_m_) = st
             best_before = keys[0, 0]
 
@@ -136,6 +148,9 @@ def _search_batch(page_vids, page_vecs, page_nbrs, vid2page, vid2slot,
             if track_visited:
                 visited = visited.at[
                     jnp.where(chargeable >= 0, chargeable, num_pages)].set(True)
+            if track_trace:
+                # the step's distinct charged pages, in one row of the trace
+                trace = trace.at[it].set(jnp.where(uniq, srt, -1))
 
             # --- fetch records ----------------------------------------------
             pg = jnp.maximum(fpages, 0)
@@ -197,13 +212,13 @@ def _search_batch(page_vids, page_vecs, page_nbrs, vid2page, vid2slot,
             w_dyn = jnp.where(dynamic_width & (stall > 0),
                               jnp.minimum(w_dyn * 2.0, jnp.float32(dw_max)),
                               w_dyn)
-            return (ids, keys, flags, it + 1, w_dyn, stall, visited,
+            return (ids, keys, flags, it + 1, w_dyn, stall, visited, trace,
                     pages_m, cache_m, nread_m, neff_m, full_m, pq_m_)
 
         out = jax.lax.while_loop(cond, body, st0)
         ids, keys, flags, it = out[0], out[1], out[2], out[3]
-        visited = out[6]
-        pages_m, cache_m, nread_m, neff_m, full_m, pq_m_ = out[7:13]
+        visited, trace = out[6], out[7]
+        pages_m, cache_m, nread_m, neff_m, full_m, pq_m_ = out[8:14]
 
         # final top-k by exact distance (re-rank among exact-known)
         final_key = jnp.where(flags[:, 1], keys[:, 1], INF)
@@ -216,6 +231,8 @@ def _search_batch(page_vids, page_vecs, page_nbrs, vid2page, vid2slot,
                "full_evals": full_m, "pq_evals": pq_m_}
         if track_visited:
             out["visited_pages"] = visited[:num_pages]
+        if track_trace:
+            out["page_trace"] = trace
         return out
 
     return jax.vmap(one)(q, entries, entry_valid)
@@ -227,12 +244,15 @@ def _search_batch(page_vids, page_vecs, page_nbrs, vid2page, vid2slot,
 def search_batched(store, pq, cfg, queries: np.ndarray, *,
                    medoid: int, memgraph=None, batch: int = 256,
                    collect_visited: bool = True,
+                   collect_trace: bool = False,
                    account_kernel_io: bool = True) -> QueryStats:
     """Python driver: feed query batches through the jitted kernel, with page
     data and the cache mask supplied by `store` (any repro.io PageStore).
 
     This is the single search path behind both `DiskIndex.search` (the
     compatibility facade) and the serving layer's batch executor.
+    `collect_trace` adds the temporally ordered per-hop page trace the
+    stateful cache subsystem replays (QueryStats.page_trace).
     """
     vids, vecs, nbrs, v2p, v2s = store.kernel_arrays()
     # the device copy of the vertex cache mask is memoized on the store
@@ -272,7 +292,8 @@ def search_batched(store, pq, cfg, queries: np.ndarray, *,
             page_search=cfg.page_search,
             dynamic_width=cfg.dynamic_width, dw_min=cfg.dw_min,
             dw_max=cfg.dw_max, pipeline=cfg.pipeline,
-            spec=cfg.pipeline_spec, track_visited=collect_visited)
+            spec=cfg.pipeline_spec, track_visited=collect_visited,
+            track_trace=collect_trace)
         out = {k_: np.asarray(v) for k_, v in out.items()}
         out["mem_hops"] = mem_hops
         out["mem_evals"] = mem_evals

@@ -9,6 +9,13 @@ benchmark hand-plumbed its own dict of fields out of `SearchResult`).
 what the I/O layer's `BatchedPageStore` consumes to coalesce duplicate page
 requests across the queries of a batch — an accounting the scalar per-query
 counters cannot express.
+
+`page_trace` is the temporally ordered form of the same charges,
+(B, max_iters, w) with -1 padding: row (b, h) names the distinct pages
+query b charged at hop h. The stateful cache subsystem
+(repro/io/page_cache.py) replays it against LRU/FIFO/2Q caches whose state
+persists across batches — an accounting the order-free bitmap cannot
+express.
 """
 from __future__ import annotations
 
@@ -35,6 +42,11 @@ class QueryStats:
     # BatchedPageStore's cross-query dedup. Optional: facade callers that
     # never batch across queries may drop it.
     visited_pages: Optional[np.ndarray] = None
+    # (B, max_iters, w) int32, -1 padded — the same charged pages in hop
+    # order; feeds the stateful cache subsystem's trace replay
+    # (repro/io/page_cache.py). Optional: only trace-replaying callers
+    # (dynamic cache policies, prefetch) pay for it.
+    page_trace: Optional[np.ndarray] = None
 
     def __len__(self) -> int:
         return len(self.hops)
@@ -50,7 +62,7 @@ class QueryStats:
         "n_read_records": "n_read", "n_eff": "n_eff",
         "full_evals": "full_evals", "pq_evals": "pq_evals",
         "mem_hops": "mem_hops", "mem_evals": "mem_evals",
-        "visited_pages": "visited_pages",
+        "visited_pages": "visited_pages", "page_trace": "page_trace",
     }
 
     @classmethod
@@ -59,6 +71,7 @@ class QueryStats:
         kw = {f: np.asarray(out[k]) for f, k in cls._KERNEL_KEYS.items()
               if k in out}
         kw.setdefault("visited_pages", None)
+        kw.setdefault("page_trace", None)
         return cls(**kw)
 
     @classmethod

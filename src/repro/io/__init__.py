@@ -1,6 +1,13 @@
+from repro.io.page_cache import (DYNAMIC_POLICIES, POLICIES, FIFOPageCache,
+                                 LRUPageCache, PageCache,
+                                 PrefetchingPageStore, SharedCachePageStore,
+                                 TwoQPageCache, make_cache)
 from repro.io.page_store import (ArrayPageStore, BatchedPageStore,
                                  CachedPageStore, PageStore, StoreCounters,
                                  build_store)
 
 __all__ = ["ArrayPageStore", "BatchedPageStore", "CachedPageStore",
-           "PageStore", "StoreCounters", "build_store"]
+           "DYNAMIC_POLICIES", "FIFOPageCache", "LRUPageCache", "PageCache",
+           "PageStore", "POLICIES", "PrefetchingPageStore",
+           "SharedCachePageStore", "StoreCounters", "TwoQPageCache",
+           "build_store", "make_cache"]

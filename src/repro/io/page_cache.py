@@ -1,0 +1,343 @@
+"""I/O layer: stateful shared page caches + trace-driven prefetching.
+
+The static vertex mask (`CachedPageStore`, §4.1.2) is order-free: whether a
+read hits depends only on which vertex is asked for, never on *when*. The
+paper's page-level complexity model (§5) says the next I/O reductions are
+temporal — page locality × path length — so this module adds the stateful
+half of the cache design space:
+
+  PageCache           — the replacement-policy interface (capacity in pages;
+                        `access(page)` probes AND admits, returning hit).
+  FIFOPageCache       — evict in admission order (scan-friendly baseline).
+  LRUPageCache        — evict least-recently-used (Starling-style shared
+                        page cache over the page-aligned layout).
+  TwoQPageCache       — simplified 2Q: a FIFO probation queue + a ghost
+                        queue + a protected LRU, so one-touch scan pages
+                        cannot flush the hot set.
+  SharedCachePageStore — decorator replaying temporally ordered page-access
+                        traces (QueryStats.page_trace) against one
+                        byte-budgeted cache that persists ACROSS batches;
+                        only misses are charged to the inner store's device.
+  PrefetchingPageStore — SharedCachePageStore + LAANN-style look-ahead: the
+                        next hops' frontier pages are issued while the
+                        current hop computes, so their service time can be
+                        hidden (the device model's `prefetch_overlap`
+                        rebate); the reads are still charged.
+
+The trace contract: `page_trace` is (B, hops, w) int32, row (b, h) holding
+the distinct pages query b charged at hop h, -1 padded — exactly the pages
+`page_reads` counted, now in arrival order. Replay walks queries in dispatch
+order and hops in time order, which is what makes LRU/FIFO/2Q meaningful.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Optional
+
+import numpy as np
+
+from repro.io.page_store import StoreCounters, fetch_mirroring_inner
+
+
+class PageCache:
+    """Replacement-policy interface: a set of resident pages with a page
+    capacity. `access` is probe-and-admit: it returns whether the page was
+    resident and, on a miss, admits it (evicting per policy)."""
+
+    name = "base"
+
+    def __init__(self, capacity_pages: int):
+        if capacity_pages < 1:
+            raise ValueError(
+                f"capacity_pages={capacity_pages} must be >= 1 "
+                f"(a cache that can hold no page cannot hit)")
+        self.capacity = int(capacity_pages)
+
+    def access(self, page: int) -> bool:
+        raise NotImplementedError
+
+    def __contains__(self, page: int) -> bool:
+        raise NotImplementedError
+
+    def __len__(self) -> int:
+        raise NotImplementedError
+
+    def reset(self) -> None:
+        raise NotImplementedError
+
+
+class FIFOPageCache(PageCache):
+    """Evict in admission order; a hit does not renew residency."""
+
+    name = "fifo"
+
+    def __init__(self, capacity_pages: int):
+        super().__init__(capacity_pages)
+        self._q: OrderedDict = OrderedDict()
+
+    def access(self, page: int) -> bool:
+        if page in self._q:
+            return True
+        if len(self._q) >= self.capacity:
+            self._q.popitem(last=False)
+        self._q[page] = None
+        return False
+
+    def __contains__(self, page: int) -> bool:
+        return page in self._q
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def reset(self) -> None:
+        self._q.clear()
+
+
+class LRUPageCache(PageCache):
+    """Evict the least-recently-used page; a hit renews residency."""
+
+    name = "lru"
+
+    def __init__(self, capacity_pages: int):
+        super().__init__(capacity_pages)
+        self._q: OrderedDict = OrderedDict()
+
+    def access(self, page: int) -> bool:
+        if page in self._q:
+            self._q.move_to_end(page)
+            return True
+        if len(self._q) >= self.capacity:
+            self._q.popitem(last=False)
+        self._q[page] = None
+        return False
+
+    def __contains__(self, page: int) -> bool:
+        return page in self._q
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def reset(self) -> None:
+        self._q.clear()
+
+
+class TwoQPageCache(PageCache):
+    """Simplified 2Q (Johnson & Shasha): new pages enter a FIFO probation
+    queue (A1in, a quarter of capacity); pages evicted from probation leave
+    an id-only ghost entry (A1out); a miss that hits the ghost queue is
+    promoted into the protected LRU (Am). One-touch beam-search scan pages
+    therefore die in probation instead of flushing the revisited hot set."""
+
+    name = "2q"
+
+    def __init__(self, capacity_pages: int):
+        super().__init__(capacity_pages)
+        self._in_cap = max(1, self.capacity // 4)
+        self._am_cap = max(1, self.capacity - self._in_cap)
+        # ghost entries are page IDS, not pages — pennies against the byte
+        # budget — so the re-use memory can run several times the capacity
+        self._ghost_cap = 4 * self.capacity
+        self._a1in: OrderedDict = OrderedDict()
+        self._ghost: OrderedDict = OrderedDict()
+        self._am: OrderedDict = OrderedDict()
+
+    def access(self, page: int) -> bool:
+        if page in self._am:
+            self._am.move_to_end(page)
+            return True
+        if page in self._a1in:
+            return True
+        # miss: a ghost hit means the page proved re-use beyond probation
+        if page in self._ghost:
+            del self._ghost[page]
+            if len(self._am) >= self._am_cap:
+                self._am.popitem(last=False)
+            self._am[page] = None
+            return False
+        if len(self._a1in) >= self._in_cap:
+            old, _ = self._a1in.popitem(last=False)
+            self._ghost[old] = None
+            while len(self._ghost) > self._ghost_cap:
+                self._ghost.popitem(last=False)
+        self._a1in[page] = None
+        return False
+
+    def __contains__(self, page: int) -> bool:
+        return page in self._a1in or page in self._am
+
+    def __len__(self) -> int:
+        return len(self._a1in) + len(self._am)
+
+    def reset(self) -> None:
+        self._a1in.clear()
+        self._ghost.clear()
+        self._am.clear()
+
+
+POLICIES = {c.name: c for c in (LRUPageCache, FIFOPageCache, TwoQPageCache)}
+
+#: build_store() cache_policy values that compose a stateful shared cache
+#: (vs. "none" and the order-free "static-vertex" mask).
+DYNAMIC_POLICIES = tuple(POLICIES)
+
+
+def make_cache(policy: str, cache_bytes: int, page_bytes: int) -> PageCache:
+    """Instantiate a policy with a byte budget translated to whole pages."""
+    if policy not in POLICIES:
+        raise ValueError(f"unknown cache policy {policy!r}; "
+                         f"choose from {sorted(POLICIES)}")
+    if cache_bytes < page_bytes:
+        raise ValueError(
+            f"cache_bytes={cache_bytes} holds no {page_bytes}-byte page")
+    return POLICIES[policy](cache_bytes // page_bytes)
+
+
+class SharedCachePageStore:
+    """Decorator: one byte-budgeted page cache shared by every query and —
+    unlike `BatchedPageStore`, whose union-dedup forgets everything at the
+    batch boundary — persisting ACROSS batches for the lifetime of the
+    store. `replay_batch` consumes temporally ordered `page_trace`s; only
+    misses are charged as device reads, so a warm cache strictly undercuts
+    batch-local coalescing whenever consecutive batches share pages (entry
+    pages, hot regions).
+
+    `lookahead > 0` adds LAANN-style prefetching: while hop h computes, the
+    pages hops h+1..h+lookahead will charge are issued ahead. Prefetched
+    reads still cost device I/O (they move `pages_fetched` and
+    `prefetch_issued`) but their service overlaps compute — the returned
+    `overlap_frac` feeds `SSDModel.concurrent_latency_us(prefetch_overlap=)`.
+    Replay is the oracle form of look-ahead (the trace is the prediction);
+    a small cache can still evict a prefetched page before use, which is
+    exactly the wasted-I/O failure mode of real look-ahead."""
+
+    def __init__(self, inner, cache: PageCache, lookahead: int = 0):
+        if lookahead < 0:
+            raise ValueError(f"lookahead={lookahead} must be >= 0")
+        self.inner = inner
+        self.cache = cache
+        self.lookahead = int(lookahead)
+        self.counters = StoreCounters()
+        self.accesses = 0          # trace/fetch page probes
+        self.prefetch_issued = 0   # look-ahead reads charged to the device
+
+    @property
+    def layout(self):
+        return self.inner.layout
+
+    @property
+    def num_pages(self) -> int:
+        return self.inner.num_pages
+
+    # -- PageStore protocol --------------------------------------------------
+
+    def fetch(self, page_ids: np.ndarray,
+              vids: Optional[np.ndarray] = None) -> dict:
+        page_ids = np.asarray(page_ids, np.int64).reshape(-1)
+        self.counters.pages_requested += len(page_ids)
+        if vids is not None:
+            # vertex-granular requests belong to the static-vertex layer —
+            # pass through, mirroring the inner store's counter movement
+            return fetch_mirroring_inner(self.counters, self.inner,
+                                         page_ids, vids)
+        hit = np.fromiter((self.cache.access(int(p)) for p in page_ids),
+                          bool, len(page_ids))
+        self.accesses += len(page_ids)
+        self.counters.cache_hits += int(hit.sum())
+        misses = page_ids[~hit]
+        self.counters.pages_fetched += len(misses)
+        self.counters.records_fetched += len(misses) * self.layout.n_p
+        if len(misses):
+            self.inner.fetch(misses)
+        lay = self.layout
+        return {"vids": lay.page_vids[page_ids],
+                "vecs": lay.page_vecs[page_ids],
+                "nbrs": lay.page_nbrs[page_ids]}
+
+    def kernel_arrays(self) -> tuple:
+        return self.inner.kernel_arrays()
+
+    def vertex_cache_mask(self) -> np.ndarray:
+        return self.inner.vertex_cache_mask()
+
+    def note_kernel_io(self, stats) -> None:
+        # replay_batch is this store's accounting path; forward only
+        self.inner.note_kernel_io(stats)
+
+    # -- trace replay (the serving-path accounting) --------------------------
+
+    def replay_batch(self, page_trace: np.ndarray) -> dict:
+        """page_trace: (B, hops, w) int32, -1 padded — each query's charged
+        pages in hop order (QueryStats.page_trace). Replays queries in
+        dispatch order against the shared cache; returns the batch's device
+        accounting:
+
+          requested         trace page accesses (== sum of page_reads)
+          issued            reads charged to the device (demand misses +
+                            look-ahead issues)
+          hits              accesses served by the resident cache
+          per_query_issued  (B,) float64 — reads charged while replaying
+                            each query (its latency share)
+          prefetch_issued   look-ahead reads within `issued`
+          overlap_frac      prefetch_issued / issued (the latency-hiding
+                            fraction for the device model)
+          hit_rate          hits / requested
+        """
+        trace = np.asarray(page_trace)
+        if trace.ndim != 3:
+            raise ValueError(
+                f"page_trace must be (B, hops, w); got shape {trace.shape}")
+        B = trace.shape[0]
+        per_query = np.zeros(B, np.float64)
+        requested = hits = issued = prefetched = 0
+        for b in range(B):
+            hop_pages = [row[row >= 0] for row in trace[b]]
+            for h, row in enumerate(hop_pages):
+                if len(row) == 0:
+                    continue
+                # look-ahead: issue the next hops' pages while h computes
+                for ahead in hop_pages[h + 1: h + 1 + self.lookahead]:
+                    for p in ahead:
+                        if int(p) not in self.cache:
+                            self.cache.access(int(p))
+                            issued += 1
+                            prefetched += 1
+                            per_query[b] += 1
+                for p in row:
+                    requested += 1
+                    if self.cache.access(int(p)):
+                        hits += 1
+                    else:
+                        issued += 1
+                        per_query[b] += 1
+        self.accesses += requested
+        self.prefetch_issued += prefetched
+        self.counters.pages_requested += requested
+        self.counters.cache_hits += hits
+        self.counters.pages_fetched += issued
+        self.counters.records_fetched += issued * self.layout.n_p
+        return {"requested": requested, "issued": issued, "hits": hits,
+                "per_query_issued": per_query,
+                "prefetch_issued": prefetched,
+                "overlap_frac": prefetched / issued if issued else 0.0,
+                "hit_rate": hits / requested if requested else 0.0}
+
+    def hit_rate(self) -> float:
+        """Lifetime hit rate over every access this store has seen."""
+        return (self.counters.cache_hits / self.accesses
+                if self.accesses else 0.0)
+
+    def reset_cache(self) -> None:
+        self.cache.reset()
+
+
+class PrefetchingPageStore(SharedCachePageStore):
+    """SharedCachePageStore with look-ahead on by default: the named form
+    `build_store(..., prefetch=k)` composes. Kept as its own class so the
+    store stack reads as policy objects (isinstance tells the configuration)."""
+
+    def __init__(self, inner, cache: PageCache, lookahead: int = 1):
+        if lookahead < 1:
+            raise ValueError(
+                f"lookahead={lookahead} must be >= 1 for a prefetching "
+                f"store (use SharedCachePageStore for pure caching)")
+        super().__init__(inner, cache, lookahead=lookahead)

@@ -49,6 +49,22 @@ class StoreCounters:
         return dataclasses.asdict(self)
 
 
+def fetch_mirroring_inner(counters: StoreCounters, inner, page_ids,
+                          vids) -> dict:
+    """Forward a vertex-granular fetch to `inner`, mirroring its full
+    counter movement (pages charged, hits served, records moved) into
+    `counters` — the one idiom every pass-through decorator uses, so
+    savings() and counter rollups agree across the stack."""
+    c = inner.counters
+    b_fetched, b_hits, b_recs = (c.pages_fetched, c.cache_hits,
+                                 c.records_fetched)
+    out = inner.fetch(page_ids, vids=vids)
+    counters.pages_fetched += c.pages_fetched - b_fetched
+    counters.cache_hits += c.cache_hits - b_hits
+    counters.records_fetched += c.records_fetched - b_recs
+    return out
+
+
 @runtime_checkable
 class PageStore(Protocol):
     """Anything that can serve pages to the kernel and serving layers."""
@@ -133,11 +149,13 @@ class CachedPageStore:
         self.counters.pages_requested += len(page_ids)
         if vids is None:
             self.counters.pages_fetched += len(page_ids)
+            self.counters.records_fetched += len(page_ids) * self.layout.n_p
             return self.inner.fetch(page_ids)
         vids = np.asarray(vids, np.int64).reshape(-1)
         hit = self.cached_vertices[vids]
         self.counters.cache_hits += int(hit.sum())
         self.counters.pages_fetched += int((~hit).sum())
+        self.counters.records_fetched += int((~hit).sum()) * self.layout.n_p
         out = self.inner.fetch(page_ids[~hit])
         # cached vertices' records come from memory: single-record "pages"
         lay = self.layout
@@ -187,13 +205,9 @@ class BatchedPageStore:
         if vids is not None:
             # vertex-granular requests can name several records on one page,
             # so page coalescing doesn't apply — pass through to the inner
-            # store (which may serve cache hits) uncoalesced, and mirror the
-            # pages it actually charged to the device
-            before = self.inner.counters.pages_fetched
-            out = self.inner.fetch(page_ids, vids=vids)
-            self.counters.pages_fetched += \
-                self.inner.counters.pages_fetched - before
-            return out
+            # store (which may serve cache hits) uncoalesced
+            return fetch_mirroring_inner(self.counters, self.inner,
+                                         page_ids, vids)
         uniq, inv = np.unique(page_ids, return_inverse=True)
         self.counters.pages_fetched += len(uniq)
         out = self.inner.fetch(uniq)
@@ -239,12 +253,47 @@ class BatchedPageStore:
 
 
 def build_store(layout, cached_vertices: Optional[np.ndarray] = None,
-                batched: bool = False):
-    """Compose the standard store stack for an index: array base, optional
-    vertex-cache decorator, optional batch-coalescing decorator."""
+                batched: bool = False, *, cache_policy: str = "none",
+                cache_bytes: int = 0, prefetch: int = 0):
+    """Compose the store stack for an index. Bottom-up:
+
+      ArrayPageStore                          (always — the simulated SSD)
+      CachedPageStore                         cache_policy="static-vertex",
+                                              or legacy `cached_vertices=`
+      BatchedPageStore                        batched=True
+      SharedCachePageStore / Prefetching...   cache_policy in DYNAMIC_POLICIES
+                                              ("lru" | "fifo" | "2q"), sized
+                                              by `cache_bytes`; `prefetch` > 0
+                                              selects the look-ahead variant
+
+    The static vertex mask (§4.1.2) is now just one policy of the cache
+    subsystem: "static-vertex" requires `cached_vertices`; passing
+    `cached_vertices` with the default policy keeps composing it (the
+    pre-refactor surface). The stateful policies sit ABOVE the batch
+    coalescer — their state outlives the batch boundary."""
+    from repro.io.page_cache import (DYNAMIC_POLICIES, PrefetchingPageStore,
+                                     SharedCachePageStore, make_cache)
+    known = ("none", "static-vertex") + DYNAMIC_POLICIES
+    if cache_policy not in known:
+        raise ValueError(f"unknown cache_policy {cache_policy!r}; "
+                         f"choose from {known}")
+    if cache_policy == "static-vertex" and cached_vertices is None:
+        raise ValueError(
+            "cache_policy='static-vertex' needs `cached_vertices` (the "
+            "vertex mask IS the policy's state)")
+    if prefetch < 0:
+        raise ValueError(f"prefetch={prefetch} must be >= 0")
+    if prefetch and cache_policy not in DYNAMIC_POLICIES:
+        raise ValueError(
+            f"prefetch={prefetch} needs a stateful cache_policy "
+            f"{DYNAMIC_POLICIES} to hold the looked-ahead pages")
     store = ArrayPageStore(layout)
     if cached_vertices is not None and cached_vertices.any():
         store = CachedPageStore(store, cached_vertices)
     if batched:
         store = BatchedPageStore(store)
+    if cache_policy in DYNAMIC_POLICIES:
+        cache = make_cache(cache_policy, cache_bytes, layout.page_bytes)
+        store = (PrefetchingPageStore(store, cache, lookahead=prefetch)
+                 if prefetch > 0 else SharedCachePageStore(store, cache))
     return store

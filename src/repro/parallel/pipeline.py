@@ -78,5 +78,11 @@ def gpipe(stage_fn, stage_params, x, n_micro: int, *, axis: str, mesh):
         return out.reshape(b, *x_rep.shape[1:])
 
     in_specs = (jax.tree.map(lambda _: P(axis), stage_params), P())
-    return jax.shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=P(),
-                         check_vma=False)(stage_params, x)
+    if hasattr(jax, "shard_map"):           # jax >= 0.6 top-level API
+        smap = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=P(), check_vma=False)
+    else:                                   # 0.4.x experimental spelling
+        from jax.experimental.shard_map import shard_map
+        smap = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=P(),
+                         check_rep=False)
+    return smap(stage_params, x)

@@ -1,3 +1,4 @@
-from repro.serving.ann_server import AnnServer, ServerConfig, ServingReport
+from repro.serving.ann_server import (AnnServer, OpenLoopReport, ServerConfig,
+                                      ServingReport)
 
-__all__ = ["AnnServer", "ServerConfig", "ServingReport"]
+__all__ = ["AnnServer", "OpenLoopReport", "ServerConfig", "ServingReport"]

@@ -1,25 +1,37 @@
-"""Serving layer: a closed-loop concurrent ANN query server.
+"""Serving layer: concurrent ANN query serving, closed- and open-loop.
 
-W closed-loop clients each keep one query in flight: submit, wait for the
-result, immediately submit the next (the paper's concurrency axis, §8 —
-queue depth is set by the client count, not an open arrival rate). Queries
-land in a queue; a dynamic batch scheduler (max-batch / max-wait) drains it;
-each batch executes on the shared search kernel with page data served
-through a `BatchedPageStore`, so duplicate page requests across the batch's
-queries are coalesced into one device read.
+Closed loop (`serve_closed_loop`): W clients each keep one query in flight —
+submit, wait, resubmit (the paper's concurrency axis, §8; queue depth is set
+by the client count). Open loop (`serve_open_loop`): queries arrive by a
+Poisson process at `rate_qps` regardless of completions — the arrival-rate
+axis the §8 storage-centric/hybrid guideline actually turns on, since an
+open queue can grow without bound when the device saturates.
+
+Both loops share the dynamic batch scheduler: drain the queue at `max_batch`
+or `max_wait_us`, whichever binds first. With an SLO configured
+(`slo_p99_us`) the batcher is deadline-aware: it dispatches early when the
+oldest enqueued query's latency budget, less the estimated service time,
+would otherwise be at risk.
+
+I/O state is per-server and SHARED ACROSS BATCHES: the store stack is built
+once (`build_store`), so a stateful cache policy (`cache_policy` = "lru" |
+"fifo" | "2q", byte-budgeted by `cache_bytes`) keeps its pages warm from one
+batch to the next, and `prefetch` adds LAANN-style look-ahead whose device
+service overlaps compute (the device model's `prefetch_overlap` rebate).
+With the default policy the batch accounting is the order-free cross-query
+union (BatchedPageStore), exactly the pre-refactor behaviour.
 
 Search execution is REAL (the jitted kernel runs every query; hops, pages,
-distance evals and result ids are measured). Time is VIRTUAL: the container
+distance evals and result ids are measured; stateful policies replay the
+kernel's temporally ordered `page_trace`). Time is VIRTUAL: the container
 has no NVMe, so the clock advances by the paper-measured device model —
-`SSDModel.concurrent_latency_us(queue_depth, ...)` with queue depth equal to
-the number of in-flight queries, and the batch coalescing rebate applied to
-the page volume. Latency therefore includes queue wait + device service; QPS
-is completed queries over elapsed virtual time.
+`SSDModel.concurrent_latency_us(queue_depth, ...)`. Latency includes queue
+wait + device service; QPS is completed queries over elapsed virtual time.
 
 Batches are padded to `max_batch` with duplicates of the batch's first query
 so the kernel compiles exactly once per (config, max_batch); padding rows
-are dropped from all accounting (and add nothing to the page union — the
-duplicate query visits the same pages).
+are dropped from all accounting before any cache replay (a padded duplicate
+must not warm the cache twice).
 """
 from __future__ import annotations
 
@@ -32,7 +44,7 @@ import numpy as np
 from repro.core.device_model import SSDModel
 from repro.core.search_kernel import search_batched
 from repro.core.stats import QueryStats
-from repro.io import build_store
+from repro.io import DYNAMIC_POLICIES, build_store
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,6 +52,40 @@ class ServerConfig:
     max_batch: int = 16          # dynamic batcher: dispatch when this full...
     max_wait_us: float = 200.0   # ...or this long after the first enqueue
     pad_batches: bool = True     # pad to max_batch (one kernel compilation)
+    # --- stateful I/O (repro/io/page_cache.py) ---
+    cache_policy: str = "none"   # "none" | "lru" | "fifo" | "2q"
+    cache_bytes: int = 0         # shared page-cache budget (0 = policy off)
+    prefetch: int = 0            # look-ahead hops (needs a cache policy)
+    # --- SLO-aware batching ---
+    slo_p99_us: Optional[float] = None   # dispatch early when the oldest
+    #                                      query's p99 budget is at risk
+
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError(
+                f"max_batch={self.max_batch} must be >= 1 "
+                f"(the batcher must be able to dispatch something)")
+        if self.max_wait_us < 0:
+            raise ValueError(
+                f"max_wait_us={self.max_wait_us} must be >= 0 "
+                f"(a negative wait deadline can never be reached)")
+        if self.cache_policy != "none" and \
+                self.cache_policy not in DYNAMIC_POLICIES:
+            raise ValueError(
+                f"cache_policy={self.cache_policy!r} must be 'none' or one "
+                f"of {DYNAMIC_POLICIES} (the static vertex mask is driven "
+                f"by SearchConfig.cache_frac, not the server)")
+        if self.cache_policy != "none" and self.cache_bytes <= 0:
+            raise ValueError(
+                f"cache_policy={self.cache_policy!r} needs cache_bytes > 0")
+        if self.prefetch < 0:
+            raise ValueError(f"prefetch={self.prefetch} must be >= 0")
+        if self.prefetch > 0 and self.cache_policy == "none":
+            raise ValueError(
+                "prefetch needs a cache_policy to hold looked-ahead pages")
+        if self.slo_p99_us is not None and self.slo_p99_us <= 0:
+            raise ValueError(
+                f"slo_p99_us={self.slo_p99_us} must be positive")
 
 
 @dataclasses.dataclass
@@ -53,10 +99,12 @@ class ServingReport:
     mean_service_us: float       # dispatch -> complete (no queue wait)
     mean_batch_size: float
     pages_per_query: float           # per-query kernel accounting
-    batched_pages_per_query: float   # after cross-query coalescing
+    batched_pages_per_query: float   # after coalescing / cache replay
     dedup_saved_frac: float          # 1 - issued/requested
     stats: QueryStats            # per-query search stats, dispatch order
     query_indices: np.ndarray    # (queries,) index into the submitted pool
+    cache_hit_rate: float = 0.0  # stateful-policy hits / requested
+    overlap_frac: float = 0.0    # prefetched fraction of issued reads
 
     def row(self) -> dict:
         return {
@@ -68,11 +116,48 @@ class ServingReport:
             "pages_per_query": round(self.pages_per_query, 2),
             "batched_pages_per_query": round(self.batched_pages_per_query, 2),
             "dedup_saved_frac": round(self.dedup_saved_frac, 4),
+            "cache_hit_rate": round(self.cache_hit_rate, 4),
+        }
+
+
+@dataclasses.dataclass
+class OpenLoopReport:
+    rate_qps: float              # offered Poisson arrival rate
+    duration_us: float           # arrival window (service may run past it)
+    offered: int                 # arrivals in the window
+    completed: int
+    elapsed_us: float            # last completion time
+    qps: float                   # goodput: completed / elapsed
+    mean_latency_us: float
+    p99_latency_us: float
+    mean_batch_size: float
+    pages_per_query: float
+    issued_pages_per_query: float
+    cache_hit_rate: float
+    overlap_frac: float
+    slo_p99_us: Optional[float]
+    slo_violation_frac: float    # fraction of queries past slo_p99_us
+    stats: QueryStats
+    query_indices: np.ndarray
+
+    def row(self) -> dict:
+        return {
+            "rate_qps": round(self.rate_qps, 1),
+            "offered": self.offered,
+            "qps": round(self.qps, 1),
+            "mean_latency_us": round(self.mean_latency_us, 1),
+            "p99_latency_us": round(self.p99_latency_us, 1),
+            "mean_batch": round(self.mean_batch_size, 2),
+            "pages_per_query": round(self.pages_per_query, 2),
+            "issued_pages_per_query": round(self.issued_pages_per_query, 2),
+            "cache_hit_rate": round(self.cache_hit_rate, 4),
+            "overlap_frac": round(self.overlap_frac, 4),
+            "slo_violation_frac": round(self.slo_violation_frac, 4),
         }
 
 
 class AnnServer:
-    """Closed-loop concurrent query server over a DiskIndex."""
+    """Concurrent query server over a DiskIndex (closed- or open-loop)."""
 
     def __init__(self, index, cfg=None, model: Optional[SSDModel] = None,
                  server_cfg: Optional[ServerConfig] = None):
@@ -80,19 +165,26 @@ class AnnServer:
         self.cfg = cfg or index.cfg
         self.model = model or SSDModel()
         self.server_cfg = server_cfg or ServerConfig()
-        # a fresh store stack with batch coalescing on top — the server's
-        # I/O counters must not leak into the facade's memoized stores
+        scfg = self.server_cfg
+        # a fresh store stack with batch coalescing (and, per config, a
+        # stateful shared cache + prefetcher) on top — the server's I/O
+        # counters and cache state must not leak into the facade's stores
         use_cache = self.cfg.cache_frac > 0 and index.cached.any()
+        self._stateful = scfg.cache_policy in DYNAMIC_POLICIES
         self.store = build_store(
             index.layout,
             cached_vertices=index.cached if use_cache else None,
-            batched=True)
+            batched=True,
+            cache_policy=scfg.cache_policy if self._stateful else "none",
+            cache_bytes=scfg.cache_bytes, prefetch=scfg.prefetch)
 
     # -- batch executor ------------------------------------------------------
 
     def _execute(self, qvecs: np.ndarray) -> QueryStats:
         """Run one batch through the kernel, padded to max_batch so the jit
-        cache holds exactly one entry per (config, max_batch)."""
+        cache holds exactly one entry per (config, max_batch). Stateful
+        cache policies additionally collect the temporally ordered page
+        trace their replay consumes."""
         b = len(qvecs)
         mb = self.server_cfg.max_batch
         if self.server_cfg.pad_batches and b < mb:
@@ -101,30 +193,41 @@ class AnnServer:
         stats = search_batched(
             self.store, self.index.pq, self.cfg, qvecs,
             medoid=self.index.medoid, memgraph=self.index.memgraph,
-            batch=len(qvecs), account_kernel_io=False)
+            batch=len(qvecs), collect_trace=self._stateful,
+            account_kernel_io=False)
         return stats.take(b)
 
     def _batch_times_us(self, stats: QueryStats, depth: int, d: int):
         """Per-query service latencies for one batch at the given device
-        queue depth, plus (requested, issued) page counts after the batch
-        store coalesced duplicate reads across the batch's queries."""
-        acct = self.store.coalesce(stats.visited_pages)
-        requested, issued = acct["requested"], acct["issued"]
-        dedup = issued / requested if requested else 1.0
-        # the batch store holds a page for the whole batch, so each query is
-        # charged its DISTINCT pages (step revisits are buffer hits), scaled
-        # by the cross-query coalescing rebate: charges sum to the union
-        distinct = stats.visited_pages.sum(axis=1).astype(np.float64)
+        queue depth, plus the batch's I/O accounting dict. With a stateful
+        policy the accounting is a trace replay against the shared cache
+        (misses charged, hits free, prefetches overlapped); otherwise it is
+        the order-free cross-query union of BatchedPageStore."""
+        if self._stateful:
+            acct = self.store.replay_batch(stats.page_trace)
+            pages = acct["per_query_issued"]
+            dedup, overlap = 1.0, acct["overlap_frac"]
+        else:
+            acct = self.store.coalesce(stats.visited_pages)
+            acct.setdefault("hits", 0)
+            acct["overlap_frac"] = overlap = 0.0
+            requested, issued = acct["requested"], acct["issued"]
+            dedup = issued / requested if requested else 1.0
+            # the batch store holds a page for the whole batch, so each query
+            # is charged its DISTINCT pages (step revisits are buffer hits),
+            # scaled by the coalescing rebate: charges sum to the union
+            pages = stats.visited_pages.sum(axis=1).astype(np.float64)
         lat = self.model.concurrent_latency_us(
             depth,
             hops=stats.hops.astype(np.float64),
-            pages=distinct,
+            pages=pages,
             full_evals=stats.full_evals.astype(np.float64),
             pq_evals=stats.pq_evals.astype(np.float64),
             mem_evals=stats.mem_evals.astype(np.float64),
             d=d, pq_m=self.cfg.pq_m, page_bytes=self.cfg.page_bytes,
-            pipeline=self.cfg.pipeline, page_dedup=dedup)
-        return np.asarray(lat, np.float64), requested, issued
+            pipeline=self.cfg.pipeline, page_dedup=dedup,
+            prefetch_overlap=overlap)
+        return np.asarray(lat, np.float64), acct
 
     # -- closed loop ---------------------------------------------------------
 
@@ -132,6 +235,14 @@ class AnnServer:
                           rounds: int = 1) -> ServingReport:
         """W clients, one outstanding query each, `rounds` queries per
         client, query vectors drawn round-robin from `queries`."""
+        if workers <= 0:
+            raise ValueError(
+                f"workers={workers} must be >= 1: a closed loop with no "
+                f"client submits nothing")
+        if rounds <= 0:
+            raise ValueError(
+                f"rounds={rounds} must be >= 1: each client must submit at "
+                f"least one query")
         queries = np.asarray(queries, np.float32)
         d = queries.shape[1]
         scfg = self.server_cfg
@@ -144,7 +255,8 @@ class AnnServer:
         exec_free = 0.0
         lat_out, qidx_out, stats_out = [], [], []
         service_out, batch_sizes = [], []
-        requested_total = issued_total = 0
+        requested_total = issued_total = hits_total = 0
+        overlap_w = 0.0
         t_end = 0.0
 
         while events:
@@ -170,10 +282,11 @@ class AnnServer:
             qvecs = queries[[q for _, _, q in batch]]
             stats = self._execute(qvecs)
             # device queue depth = queries in flight in this batch
-            lat, req_pages, uniq_pages = self._batch_times_us(
-                stats, len(batch), d)
-            requested_total += req_pages
-            issued_total += uniq_pages
+            lat, acct = self._batch_times_us(stats, len(batch), d)
+            requested_total += acct["requested"]
+            issued_total += acct["issued"]
+            hits_total += acct["hits"]
+            overlap_w += acct["overlap_frac"] * acct["issued"]
             done = dispatch + lat
             exec_free = dispatch + float(lat.max())
             t_end = max(t_end, exec_free)
@@ -202,4 +315,117 @@ class AnnServer:
             dedup_saved_frac=(1.0 - issued_total / requested_total
                               if requested_total else 0.0),
             stats=all_stats,
-            query_indices=np.asarray(qidx_out, np.int64))
+            query_indices=np.asarray(qidx_out, np.int64),
+            cache_hit_rate=(hits_total / requested_total
+                            if requested_total else 0.0),
+            overlap_frac=(overlap_w / issued_total if issued_total else 0.0))
+
+    # -- open loop -----------------------------------------------------------
+
+    def serve_open_loop(self, queries: np.ndarray, rate_qps: float,
+                        duration_us: float, seed: int = 0) -> OpenLoopReport:
+        """Poisson arrivals at `rate_qps` for `duration_us` of virtual time,
+        query vectors drawn round-robin. Arrivals do not wait for
+        completions (open loop), so past the device's saturation point the
+        queue — and the latency — grows with the backlog; every admitted
+        arrival is served to completion, even past the window's end.
+
+        The batcher dispatches at `max_batch` / `max_wait_us` as in the
+        closed loop; with `slo_p99_us` set it also dispatches as soon as the
+        oldest enqueued query's remaining budget (SLO minus the estimated
+        batch service time) runs out — trading batch-size efficiency for
+        tail latency exactly when the SLO is at risk."""
+        if rate_qps <= 0:
+            raise ValueError(f"rate_qps={rate_qps} must be positive")
+        if duration_us <= 0:
+            raise ValueError(f"duration_us={duration_us} must be positive")
+        queries = np.asarray(queries, np.float32)
+        d = queries.shape[1]
+        scfg = self.server_cfg
+        rng = np.random.default_rng(seed)
+
+        mean_gap = 1e6 / rate_qps
+        arrivals: List[float] = []
+        t = float(rng.exponential(mean_gap))
+        while t < duration_us:
+            arrivals.append(t)
+            t += float(rng.exponential(mean_gap))
+        arr = np.asarray(arrivals)
+        n = len(arr)
+        if n == 0:
+            # nothing arrived: report without paying a kernel compile
+            zi = np.zeros(0, np.int64)
+            zf = np.zeros(0, np.float64)
+            empty = QueryStats(
+                ids=np.zeros((0, self.cfg.k), np.int64),
+                dists=np.zeros((0, self.cfg.k), np.float64),
+                hops=zi, page_reads=zf, cache_hits=zf, n_read_records=zf,
+                n_eff=zf, full_evals=zf, pq_evals=zf, mem_hops=zi,
+                mem_evals=zi)
+            return OpenLoopReport(
+                rate_qps=rate_qps, duration_us=duration_us, offered=0,
+                completed=0, elapsed_us=0.0, qps=0.0, mean_latency_us=0.0,
+                p99_latency_us=0.0, mean_batch_size=0.0, pages_per_query=0.0,
+                issued_pages_per_query=0.0, cache_hit_rate=0.0,
+                overlap_frac=0.0, slo_p99_us=scfg.slo_p99_us,
+                slo_violation_frac=0.0, stats=empty,
+                query_indices=np.zeros(0, np.int64))
+        qidx = np.arange(n) % len(queries)
+
+        exec_free = 0.0
+        est_service: Optional[float] = None
+        lat_out, stats_out, batch_sizes = [], [], []
+        requested_total = issued_total = hits_total = 0
+        overlap_w = 0.0
+        t_end = 0.0
+        i = 0
+        while i < n:
+            t0 = arr[i]
+            deadline = t0 + scfg.max_wait_us
+            if scfg.slo_p99_us is not None:
+                # the oldest query must still fit its p99 budget after the
+                # (estimated) service time — dispatch before it cannot
+                budget = scfg.slo_p99_us - (est_service or 0.0)
+                deadline = min(deadline, t0 + max(budget, 0.0))
+            t_full = (arr[i + scfg.max_batch - 1]
+                      if i + scfg.max_batch <= n else np.inf)
+            dispatch = max(exec_free, min(deadline, t_full), t0)
+            j = i + 1
+            while j < n and j - i < scfg.max_batch and arr[j] <= dispatch:
+                j += 1
+            stats = self._execute(queries[qidx[i:j]])
+            lat, acct = self._batch_times_us(stats, j - i, d)
+            requested_total += acct["requested"]
+            issued_total += acct["issued"]
+            hits_total += acct["hits"]
+            overlap_w += acct["overlap_frac"] * acct["issued"]
+            done = dispatch + lat
+            exec_free = dispatch + float(lat.max())
+            t_end = max(t_end, exec_free)
+            lat_out.extend((done - arr[i:j]).tolist())
+            batch_sizes.append(j - i)
+            stats_out.append(stats)
+            mean_lat = float(lat.mean())
+            est_service = (mean_lat if est_service is None
+                           else 0.5 * est_service + 0.5 * mean_lat)
+            i = j
+
+        all_stats = QueryStats.concat(stats_out)
+        lat_arr = np.asarray(lat_out)
+        slo = scfg.slo_p99_us
+        return OpenLoopReport(
+            rate_qps=rate_qps, duration_us=duration_us, offered=n,
+            completed=n, elapsed_us=t_end,
+            qps=n / (t_end * 1e-6) if t_end > 0 else 0.0,
+            mean_latency_us=float(lat_arr.mean()),
+            p99_latency_us=float(np.percentile(lat_arr, 99)),
+            mean_batch_size=float(np.mean(batch_sizes)),
+            pages_per_query=float(all_stats.page_reads.mean()),
+            issued_pages_per_query=issued_total / n,
+            cache_hit_rate=(hits_total / requested_total
+                            if requested_total else 0.0),
+            overlap_frac=(overlap_w / issued_total if issued_total else 0.0),
+            slo_p99_us=slo,
+            slo_violation_frac=(float(np.mean(lat_arr > slo))
+                                if slo is not None else 0.0),
+            stats=all_stats, query_indices=qidx)

@@ -159,6 +159,7 @@ def _kernel_out(b, seed, with_visited=True):
            "mem_evals": rng.integers(0, 90, (b,))}
     if with_visited:
         out["visited_pages"] = rng.random((b, 17)) < 0.3
+        out["page_trace"] = rng.integers(-1, 17, (b, 6, 4)).astype(np.int32)
     return out
 
 

@@ -1,0 +1,294 @@
+"""Stateful page-cache subsystem (repro/io/page_cache) unit tests: policy
+semantics and hit-rate ordering on synthetic revisit-heavy traces, shared
+cache persistence across batches, look-ahead prefetch accounting, the grown
+build_store surface, the BatchedPageStore counter-mirroring fix, and the
+device model's prefetch-overlap rebate. Everything runs on tiny synthetic
+layouts/traces — no graph build — so it is all `-m fast`."""
+import numpy as np
+import pytest
+
+from repro.core import SSDModel
+from repro.core.pages import build_layout
+from repro.io import (DYNAMIC_POLICIES, ArrayPageStore, BatchedPageStore,
+                      CachedPageStore, FIFOPageCache, LRUPageCache,
+                      PageStore, PrefetchingPageStore, SharedCachePageStore,
+                      TwoQPageCache, build_store, make_cache)
+
+pytestmark = pytest.mark.fast
+
+
+@pytest.fixture()
+def tiny_layout():
+    rng = np.random.default_rng(0)
+    n, d, R = 64, 8, 4
+    vectors = rng.normal(size=(n, d)).astype(np.float32)
+    graph = rng.integers(0, n, (n, R)).astype(np.int32)
+    return build_layout(vectors, graph, page_bytes=256)
+
+
+def _hit_rate(cache, seq) -> float:
+    return sum(cache.access(p) for p in seq) / len(seq)
+
+
+def _trace(*hop_rows, width=None):
+    """Build a (1, H, W) page_trace from per-hop page lists, -1 padded."""
+    w = width or max(len(r) for r in hop_rows)
+    t = np.full((1, len(hop_rows), w), -1, np.int32)
+    for h, row in enumerate(hop_rows):
+        t[0, h, :len(row)] = row
+    return t
+
+
+# --- replacement-policy semantics ------------------------------------------
+
+
+def test_policy_capacity_and_make_cache_validation():
+    with pytest.raises(ValueError, match="capacity_pages=0"):
+        LRUPageCache(0)
+    with pytest.raises(ValueError, match="unknown cache policy"):
+        make_cache("arc", 4096, 4096)
+    with pytest.raises(ValueError, match="holds no"):
+        make_cache("lru", 100, 4096)
+    assert isinstance(make_cache("2q", 10 * 4096, 4096), TwoQPageCache)
+    assert make_cache("fifo", 10 * 4096, 4096).capacity == 10
+
+
+def test_lru_renews_residency_fifo_does_not():
+    seq = [0, 1, 0, 2, 0, 3, 0, 4]   # page 0 re-touched before each insert
+    lru, fifo = LRUPageCache(2), FIFOPageCache(2)
+    assert _hit_rate(lru, seq) == pytest.approx(3 / 8)   # every 0-revisit hits
+    assert _hit_rate(fifo, seq) < 3 / 8                  # 0 ages out anyway
+    assert 0 in lru and len(lru) == 2
+
+
+def test_hit_rate_ordering_recency_heavy_trace():
+    """One hot page interleaved with one-touch fillers: recency wins —
+    LRU >= 2Q > FIFO."""
+    seq, f = [], 100
+    for _ in range(200):
+        seq.extend((0, f))
+        f += 1
+    rates = {c.name: _hit_rate(c(4), seq)
+             for c in (LRUPageCache, FIFOPageCache, TwoQPageCache)}
+    assert rates["lru"] >= rates["2q"] > rates["fifo"], rates
+    assert rates["lru"] > 0.45
+
+
+def test_hit_rate_ordering_scan_heavy_trace():
+    """A small revisited hot set buried in a one-touch scan: the scan
+    flushes LRU and FIFO completely, while 2Q's probation queue keeps the
+    scan out of the protected set — the classic 2Q win."""
+    seq, f = [], 1000
+    for i in range(600):
+        seq.append(i % 4)                 # hot set of 4
+        seq.extend(range(f, f + 3))       # 3 one-touch scan pages
+        f += 3
+    rates = {c.name: _hit_rate(c(8), seq)
+             for c in (LRUPageCache, FIFOPageCache, TwoQPageCache)}
+    assert rates["2q"] > rates["lru"] == rates["fifo"] == 0.0, rates
+    assert rates["2q"] > 0.2
+
+
+def test_2q_reset_and_membership():
+    c = TwoQPageCache(8)
+    for p in (1, 2, 3, 1, 1):
+        c.access(p)
+    assert 1 in c and len(c) >= 2
+    c.reset()
+    assert len(c) == 0 and 1 not in c
+
+
+# --- SharedCachePageStore: trace replay + cross-batch persistence ----------
+
+
+def test_replay_accounting_and_counters(tiny_layout):
+    store = SharedCachePageStore(ArrayPageStore(tiny_layout),
+                                 LRUPageCache(8))
+    assert isinstance(store, PageStore)
+    acct = store.replay_batch(_trace([0, 1], [1, 2], [0]))
+    # hop order: 0,1 miss; 1 hits (resident), 2 misses; 0 hits
+    assert acct == {"requested": 5, "issued": 3, "hits": 2,
+                    "per_query_issued": acct["per_query_issued"],
+                    "prefetch_issued": 0, "overlap_frac": 0.0,
+                    "hit_rate": 2 / 5}
+    np.testing.assert_array_equal(acct["per_query_issued"], [3.0])
+    c = store.counters
+    assert (c.pages_requested, c.pages_fetched, c.cache_hits) == (5, 3, 2)
+    assert c.records_fetched == 3 * tiny_layout.n_p
+    assert store.hit_rate() == pytest.approx(2 / 5)
+
+
+def test_shared_cache_persists_across_batches(tiny_layout):
+    """The decisive difference from BatchedPageStore: pages fetched by one
+    batch serve the next batch from memory."""
+    store = SharedCachePageStore(ArrayPageStore(tiny_layout),
+                                 LRUPageCache(16))
+    first = store.replay_batch(_trace([0, 1, 2], [3, 4]))
+    assert first["hits"] == 0
+    second = store.replay_batch(_trace([2, 3], [0, 5]))
+    assert second["hits"] == 3          # 2, 3, 0 warmed by batch one
+    assert second["issued"] == 1        # only page 5 reaches the device
+    # a batch-local coalescer must charge all 4 distinct pages of batch two
+    batched = BatchedPageStore(ArrayPageStore(tiny_layout))
+    vis = np.zeros((1, tiny_layout.num_pages), bool)
+    vis[0, [2, 3, 0, 5]] = True
+    assert batched.coalesce(vis)["issued"] == 4 > second["issued"]
+
+
+def test_warm_lru_replay_beats_batch_union(tiny_layout):
+    """Acceptance shape (unit scale): with a warm cache the same trace
+    replays with strictly fewer device reads than the cross-query union."""
+    trace = np.stack([
+        _trace([0, 1], [2, 3])[0],
+        _trace([1, 2], [4])[0]])
+    shared = SharedCachePageStore(ArrayPageStore(tiny_layout),
+                                  LRUPageCache(32))
+    shared.replay_batch(trace)                    # cold pass warms the cache
+    warm = shared.replay_batch(trace)
+    union = BatchedPageStore(ArrayPageStore(tiny_layout))
+    vis = np.zeros((2, tiny_layout.num_pages), bool)
+    vis[0, [0, 1, 2, 3]] = True
+    vis[1, [1, 2, 4]] = True
+    issued_union = union.coalesce(vis)["issued"]
+    assert warm["issued"] == 0 < issued_union
+    assert warm["hit_rate"] == 1.0
+
+
+def test_replay_rejects_malformed_trace(tiny_layout):
+    store = SharedCachePageStore(ArrayPageStore(tiny_layout), LRUPageCache(4))
+    with pytest.raises(ValueError, match="page_trace must be"):
+        store.replay_batch(np.zeros((2, 5), np.int32))
+
+
+def test_shared_cache_fetch_path_hits_and_forwards(tiny_layout):
+    inner = ArrayPageStore(tiny_layout)
+    store = SharedCachePageStore(inner, LRUPageCache(8))
+    out = store.fetch([0, 1, 0])
+    np.testing.assert_array_equal(out["vids"][0], tiny_layout.page_vids[0])
+    np.testing.assert_array_equal(out["vids"][2], out["vids"][0])
+    assert store.counters.cache_hits == 1       # the repeated 0
+    assert store.counters.pages_fetched == 2
+    assert inner.counters.pages_fetched == 2    # misses reach the device
+    out2 = store.fetch([1])                     # warmed by the first fetch
+    assert store.counters.cache_hits == 2
+    assert inner.counters.pages_fetched == 2
+    np.testing.assert_allclose(out2["vecs"][0], tiny_layout.page_vecs[1])
+
+
+# --- PrefetchingPageStore: look-ahead + overlap accounting -----------------
+
+
+def test_prefetch_overlap_accounting(tiny_layout):
+    store = PrefetchingPageStore(ArrayPageStore(tiny_layout),
+                                 LRUPageCache(32), lookahead=1)
+    acct = store.replay_batch(_trace([0, 1], [2, 3], [4]))
+    # hop 0: prefetch {2,3}; hop 1 accesses hit; hop 1: prefetch {4}; hits
+    assert acct["prefetch_issued"] == 3
+    assert acct["issued"] == 5                  # same device reads in total
+    assert acct["hits"] == 3                    # ...but 3 arrive early
+    assert acct["overlap_frac"] == pytest.approx(3 / 5)
+    assert store.prefetch_issued == 3
+
+
+def test_prefetch_same_total_io_as_pure_cache(tiny_layout):
+    """Look-ahead hides latency; it must not change the number of device
+    reads when the cache is big enough to hold the prefetched pages."""
+    trace = _trace([0, 1], [2, 3], [0, 4], [5])
+    pure = SharedCachePageStore(ArrayPageStore(tiny_layout),
+                                LRUPageCache(32))
+    pf = PrefetchingPageStore(ArrayPageStore(tiny_layout),
+                              LRUPageCache(32), lookahead=2)
+    a, b = pure.replay_batch(trace), pf.replay_batch(trace)
+    assert a["issued"] == b["issued"] == 6
+    assert b["overlap_frac"] > a["overlap_frac"] == 0.0
+
+
+def test_prefetching_store_requires_lookahead():
+    with pytest.raises(ValueError, match="lookahead=0"):
+        PrefetchingPageStore(None, LRUPageCache(4), lookahead=0)
+    with pytest.raises(ValueError, match="lookahead=-1"):
+        SharedCachePageStore(None, LRUPageCache(4), lookahead=-1)
+
+
+# --- build_store surface ---------------------------------------------------
+
+
+def test_build_store_cache_policy_surface(tiny_layout):
+    lru = build_store(tiny_layout, batched=True, cache_policy="lru",
+                      cache_bytes=8 * tiny_layout.page_bytes)
+    assert isinstance(lru, SharedCachePageStore)
+    assert not isinstance(lru, PrefetchingPageStore)
+    assert isinstance(lru.inner, BatchedPageStore)
+    assert isinstance(lru.cache, LRUPageCache) and lru.cache.capacity == 8
+
+    pf = build_store(tiny_layout, cache_policy="2q",
+                     cache_bytes=8 * tiny_layout.page_bytes, prefetch=2)
+    assert isinstance(pf, PrefetchingPageStore) and pf.lookahead == 2
+    assert isinstance(pf.cache, TwoQPageCache)
+
+    n = tiny_layout.vid2page.shape[0]
+    sv = build_store(tiny_layout, cached_vertices=np.ones(n, bool),
+                     cache_policy="static-vertex")
+    assert isinstance(sv, CachedPageStore)
+    assert set(DYNAMIC_POLICIES) == {"lru", "fifo", "2q"}
+
+
+def test_build_store_surface_validation(tiny_layout):
+    with pytest.raises(ValueError, match="unknown cache_policy"):
+        build_store(tiny_layout, cache_policy="arc")
+    with pytest.raises(ValueError, match="static-vertex"):
+        build_store(tiny_layout, cache_policy="static-vertex")
+    with pytest.raises(ValueError, match="prefetch=1"):
+        build_store(tiny_layout, prefetch=1)
+    with pytest.raises(ValueError, match="holds no"):
+        build_store(tiny_layout, cache_policy="lru", cache_bytes=0)
+
+
+# --- satellite: BatchedPageStore mirrors the full counter movement ---------
+
+
+def test_batched_store_mirrors_hits_and_records(tiny_layout):
+    """Regression: the vids pass-through mirrored only pages_fetched, so
+    savings() and rollups disagreed with the inner cache store."""
+    n = tiny_layout.vid2page.shape[0]
+    cached = np.zeros(n, bool)
+    cached[:4] = True
+    mid = CachedPageStore(ArrayPageStore(tiny_layout), cached)
+    store = BatchedPageStore(mid)
+    vids = np.asarray([1, 30, 30])          # vid 1 cached, 30s are misses
+    store.fetch(tiny_layout.vid2page[vids], vids=vids)
+    assert store.counters.cache_hits == mid.counters.cache_hits == 1
+    assert store.counters.pages_fetched == mid.counters.pages_fetched == 2
+    assert store.counters.records_fetched \
+        == mid.counters.records_fetched == 2 * tiny_layout.n_p
+    assert store.savings() == 1             # the hit really was saved I/O
+
+
+def test_cached_store_counts_records_on_page_requests(tiny_layout):
+    n = tiny_layout.vid2page.shape[0]
+    store = CachedPageStore(ArrayPageStore(tiny_layout),
+                            np.zeros(n, bool))
+    store.fetch([0, 1])
+    assert store.counters.records_fetched == 2 * tiny_layout.n_p
+    assert store.counters.records_fetched \
+        == store.inner.counters.records_fetched
+
+
+# --- device model: prefetch-overlap rebate ---------------------------------
+
+
+def test_prefetch_overlap_rebate_monotone_and_bounded():
+    m = SSDModel()
+    kw = dict(hops=np.array([10.0]), pages=np.array([40.0]),
+              full_evals=np.array([200.0]), pq_evals=np.array([900.0]),
+              mem_evals=np.array([0.0]), d=96, pq_m=16, page_bytes=4096)
+    base = float(m.concurrent_latency_us(8, **kw)[0])
+    lats = [float(m.concurrent_latency_us(8, prefetch_overlap=f, **kw)[0])
+            for f in (0.0, 0.25, 0.5, 1.0)]
+    assert lats[0] == pytest.approx(base)            # rebate off == before
+    assert all(a >= b for a, b in zip(lats, lats[1:])), lats
+    assert lats[-1] < lats[0]
+    # hidden I/O is capped by the compute actually available
+    comp = float(m._compute_us(kw["full_evals"], kw["pq_evals"],
+                               kw["mem_evals"], kw["d"], kw["pq_m"])[0])
+    assert base - lats[-1] <= comp + 1e-9

@@ -1,7 +1,10 @@
-"""Serving layer: closed-loop AnnServer behaviour on a real (small) index.
+"""Serving layer: closed- and open-loop AnnServer behaviour on a real
+(small) index — batching, stateful shared-cache policies, look-ahead
+prefetch, SLO-aware dispatch, and argument validation.
 
 Uses the session-scoped base_index fixture (2048-vector deep-like dataset),
-so these are not `-m fast` — the graph build dominates."""
+so these are not `-m fast` (the graph build dominates) — except the pure
+ServerConfig validation cases."""
 import numpy as np
 import pytest
 
@@ -81,3 +84,202 @@ def test_dynamic_batcher_respects_max_batch(base_index, small_dataset):
     rep = srv.serve_closed_loop(small_dataset.queries, workers=16, rounds=1)
     assert rep.mean_batch_size <= 4.0
     assert rep.queries == 16
+
+
+# --- closed-loop edge cases + argument validation (satellites) -------------
+
+
+def test_closed_loop_more_workers_than_queries(base_index, small_dataset):
+    """Clients beyond the query pool wrap around round-robin; every one of
+    workers x rounds submissions completes."""
+    nq = len(small_dataset.queries)
+    srv = _server(base_index, get_preset("baseline", L=16), max_batch=8)
+    rep = srv.serve_closed_loop(small_dataset.queries, workers=nq + 8,
+                                rounds=1)
+    assert rep.queries == nq + 8
+    assert len(rep.stats) == nq + 8
+    assert rep.query_indices.max() < nq
+
+
+def test_closed_loop_zero_max_wait(base_index, small_dataset):
+    """max_wait_us=0 still batches simultaneous submissions (all clients
+    submit at t=0) and completes the full workload."""
+    srv = _server(base_index, get_preset("baseline", L=16), max_batch=4,
+                  max_wait_us=0.0)
+    rep = srv.serve_closed_loop(small_dataset.queries, workers=8, rounds=2)
+    assert rep.queries == 16
+    assert rep.mean_batch_size <= 4.0
+    assert rep.qps > 0
+
+
+def test_closed_loop_rejects_bad_workers_and_rounds(base_index,
+                                                    small_dataset):
+    srv = _server(base_index, get_preset("baseline", L=16))
+    with pytest.raises(ValueError, match="workers=0"):
+        srv.serve_closed_loop(small_dataset.queries, workers=0)
+    with pytest.raises(ValueError, match="workers=-3"):
+        srv.serve_closed_loop(small_dataset.queries, workers=-3)
+    with pytest.raises(ValueError, match="rounds=0"):
+        srv.serve_closed_loop(small_dataset.queries, workers=2, rounds=0)
+
+
+@pytest.mark.fast
+@pytest.mark.parametrize("kw,msg", [
+    (dict(max_batch=0), "max_batch=0"),
+    (dict(max_wait_us=-1.0), "max_wait_us=-1.0"),
+    (dict(cache_policy="lru"), "cache_bytes"),
+    (dict(cache_policy="arc", cache_bytes=1 << 20), "cache_policy='arc'"),
+    (dict(prefetch=-1), "prefetch=-1"),
+    (dict(prefetch=1), "prefetch needs a cache_policy"),
+    (dict(slo_p99_us=0.0), "slo_p99_us=0.0"),
+])
+def test_server_config_rejects_invalid(kw, msg):
+    with pytest.raises(ValueError, match=msg):
+        ServerConfig(**kw)
+
+
+# --- stateful cache serving + open loop (tentpole) -------------------------
+
+
+def _cached_server(idx, cfg, policy="lru", pages=512, prefetch=0,
+                   max_batch=8, slo_p99_us=None):
+    return AnnServer(idx, cfg, server_cfg=ServerConfig(
+        max_batch=max_batch, cache_policy=policy,
+        cache_bytes=pages * idx.layout.page_bytes, prefetch=prefetch,
+        slo_p99_us=slo_p99_us))
+
+
+def test_page_trace_matches_visited_bitmap(base_index, small_dataset):
+    """The temporally ordered trace and the order-free bitmap are two views
+    of the same charges: same page sets, same per-query counts."""
+    from repro.core.search_kernel import search_batched
+    from repro.io import build_store
+    store = build_store(base_index.layout, batched=True)
+    cfg = get_preset("baseline", L=32)
+    st = search_batched(store, base_index.pq, cfg, small_dataset.queries,
+                        medoid=base_index.medoid, collect_visited=True,
+                        collect_trace=True, account_kernel_io=False)
+    assert st.page_trace.shape[0] == len(small_dataset.queries)
+    for b in range(len(st)):
+        tr = st.page_trace[b]
+        charged = tr[tr >= 0]
+        assert len(charged) == int(st.page_reads[b])
+        assert (set(charged.tolist())
+                == set(np.flatnonzero(st.visited_pages[b]).tolist()))
+
+
+def test_warm_shared_lru_cache_beats_batched_baseline(base_index,
+                                                      small_dataset):
+    """Acceptance: a SharedCachePageStore with an LRU policy and a warm
+    cache strictly reduces pages_fetched vs. the batch-coalescing baseline
+    on the same workload."""
+    cfg = get_preset("baseline", L=32)
+    workload = dict(workers=16, rounds=1)
+
+    base_srv = _server(base_index, cfg, max_batch=8)
+    base_srv.serve_closed_loop(small_dataset.queries, **workload)
+    baseline_fetched = base_srv.store.counters.pages_fetched
+
+    cached_srv = _cached_server(base_index, cfg,
+                                pages=base_index.layout.num_pages)
+    cached_srv.serve_closed_loop(small_dataset.queries, **workload)  # warm-up
+    warm0 = cached_srv.store.counters.pages_fetched
+    rep = cached_srv.serve_closed_loop(small_dataset.queries, **workload)
+    warm_fetched = cached_srv.store.counters.pages_fetched - warm0
+
+    assert 0 <= warm_fetched < baseline_fetched
+    assert rep.cache_hit_rate > 0.9
+    # the cache must not change what the queries return
+    want = base_index.search(small_dataset.queries, cfg)
+    np.testing.assert_array_equal(rep.stats.ids, want.ids[rep.query_indices])
+
+
+def test_cache_policies_state_persists_across_batches(base_index,
+                                                      small_dataset):
+    """Within one closed-loop run the shared cache spans batch boundaries:
+    with more total queries than max_batch, later batches hit on pages
+    fetched by earlier ones, so issued pages undercut the per-batch union
+    accounting of the plain batched store."""
+    cfg = get_preset("baseline", L=32)
+    plain = _server(base_index, cfg, max_batch=4)
+    rep_plain = plain.serve_closed_loop(small_dataset.queries, workers=16,
+                                        rounds=2)
+    srv = _cached_server(base_index, cfg, max_batch=4,
+                         pages=base_index.layout.num_pages)
+    rep = srv.serve_closed_loop(small_dataset.queries, workers=16, rounds=2)
+    assert rep.cache_hit_rate > 0.0
+    assert rep.batched_pages_per_query < rep_plain.batched_pages_per_query
+    assert srv.store.counters.cache_hits > 0
+
+
+def test_open_loop_reports_and_determinism(base_index, small_dataset):
+    cfg = get_preset("baseline", L=16)
+    srv = _cached_server(base_index, cfg, policy="lru", pages=256)
+    rep = srv.serve_open_loop(small_dataset.queries, rate_qps=4000.0,
+                              duration_us=10000.0, seed=7)
+    assert rep.offered == rep.completed == len(rep.stats)
+    assert rep.elapsed_us > 0 and rep.qps > 0
+    assert rep.p99_latency_us >= rep.mean_latency_us
+    assert 0.0 <= rep.cache_hit_rate <= 1.0
+    row = rep.row()
+    assert {"rate_qps", "qps", "p99_latency_us",
+            "cache_hit_rate"} <= set(row)
+    # same seed -> same arrival process -> same report
+    srv2 = _cached_server(base_index, cfg, policy="lru", pages=256)
+    rep2 = srv2.serve_open_loop(small_dataset.queries, rate_qps=4000.0,
+                                duration_us=10000.0, seed=7)
+    assert rep2.offered == rep.offered
+    np.testing.assert_allclose(rep2.mean_latency_us, rep.mean_latency_us)
+
+
+def test_open_loop_latency_grows_with_offered_rate(base_index,
+                                                   small_dataset):
+    """Open loop past saturation: a higher offered rate can only deepen the
+    backlog, so mean latency is non-decreasing in arrival rate."""
+    cfg = get_preset("baseline", L=16)
+    lats = []
+    for rate in (1000.0, 64000.0):
+        srv = _server(base_index, cfg, max_batch=8)
+        rep = srv.serve_open_loop(small_dataset.queries, rate_qps=rate,
+                                  duration_us=10000.0, seed=3)
+        lats.append(rep.mean_latency_us)
+    assert lats[1] >= lats[0], lats
+
+
+def test_open_loop_slo_batcher_dispatches_early(base_index, small_dataset):
+    """With a tight SLO the batcher trades batch size for tail latency:
+    batches get smaller and p99 must not get worse."""
+    cfg = get_preset("baseline", L=16)
+    kw = dict(rate_qps=2000.0, duration_us=20000.0, seed=5)
+    relaxed = _server(base_index, cfg, max_batch=16, max_wait_us=5000.0)
+    rep_rel = relaxed.serve_open_loop(small_dataset.queries, **kw)
+    tight = AnnServer(base_index, cfg, server_cfg=ServerConfig(
+        max_batch=16, max_wait_us=5000.0, slo_p99_us=1500.0))
+    rep_slo = tight.serve_open_loop(small_dataset.queries, **kw)
+    assert rep_slo.mean_batch_size <= rep_rel.mean_batch_size
+    assert rep_slo.p99_latency_us <= rep_rel.p99_latency_us * 1.001
+    assert rep_slo.slo_p99_us == 1500.0
+
+
+def test_open_loop_prefetch_overlap_cuts_latency(base_index, small_dataset):
+    """LAANN-style look-ahead: same device reads, part of their service
+    hidden behind compute -> mean latency no worse than the pure cache."""
+    cfg = get_preset("baseline", L=16)
+    kw = dict(rate_qps=4000.0, duration_us=10000.0, seed=11)
+    pure = _cached_server(base_index, cfg, pages=256)
+    rep_pure = pure.serve_open_loop(small_dataset.queries, **kw)
+    pf = _cached_server(base_index, cfg, pages=256, prefetch=2)
+    rep_pf = pf.serve_open_loop(small_dataset.queries, **kw)
+    assert rep_pf.overlap_frac > 0.0 == rep_pure.overlap_frac
+    assert rep_pf.mean_latency_us <= rep_pure.mean_latency_us * 1.001
+    assert rep_pf.offered == rep_pure.offered
+
+
+def test_open_loop_validates_arguments(base_index, small_dataset):
+    srv = _server(base_index, get_preset("baseline", L=16))
+    with pytest.raises(ValueError, match="rate_qps=0"):
+        srv.serve_open_loop(small_dataset.queries, rate_qps=0,
+                            duration_us=1000.0)
+    with pytest.raises(ValueError, match="duration_us=-5"):
+        srv.serve_open_loop(small_dataset.queries, rate_qps=100.0,
+                            duration_us=-5)
