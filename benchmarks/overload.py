@@ -1,0 +1,163 @@
+"""Overload sweep: offered load x admission policy x tenant mix.
+
+The open-loop sweep (benchmarks/open_loop.py) shows WHERE the device
+saturates; this one shows what the serving layer should DO about it. An
+uncontrolled open loop past saturation has unbounded backlog: its p99 is a
+function of how long you measure, not of the system. The sweep therefore
+
+  1. probes the saturation goodput (an uncontrolled burst well past any
+     plausible knee — completions/elapsed IS the service capacity),
+  2. offers 0.5x / 1x / 2x / 4x that capacity under each admission policy
+     (`none`, `reject`, `shed-oldest`, `degrade`), reporting goodput vs
+     offered load, p99-of-admitted, shed/degraded counts — at 2x the
+     window AND at 2x twice the window, so the reader can SEE bounded vs
+     duration-divergent p99 (the acceptance criterion),
+  3. runs a two-tenant mix (one well-behaved tenant, one flooding) over a
+     shared vs partitioned vs partition+rebalanced page cache, reporting
+     per-tenant hit rates and their min/max fairness ratio.
+
+Env knobs (dataset sizing in benchmarks/common.py):
+  REPRO_OV_DURATION   arrival window in us of virtual time (default 20000)
+  REPRO_OV_QUEUE_CAP  bounded-queue capacity (default 32)
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import get_preset, recall_at_k
+from repro.serving import AdmissionConfig, AnnServer, ServerConfig
+
+DURATION_US = float(os.environ.get("REPRO_OV_DURATION", 20000.0))
+QUEUE_CAP = int(os.environ.get("REPRO_OV_QUEUE_CAP", 32))
+LOAD_FACTORS = (0.5, 1.0, 2.0, 4.0)
+SYSTEM = "starling"
+L = 32
+
+
+def _admission(policy: str):
+    if policy == "none":
+        return None
+    return AdmissionConfig(policy=policy, queue_cap=QUEUE_CAP,
+                           degrade_levels=(1.0, 0.5, 0.25))
+
+
+def _server(idx, cfg, policy: str, max_batch: int = 16, **kw):
+    return AnnServer(idx, cfg, common.MODEL, ServerConfig(
+        max_batch=max_batch, admission=_admission(policy), **kw))
+
+
+def probe_saturation(name: str, preset: str = SYSTEM) -> float:
+    """Service capacity in qps: offer an uncontrolled flood and measure
+    goodput (completions / elapsed virtual time) — past saturation that
+    ratio is the device ceiling, independent of the offered rate."""
+    ds = common.dataset(name)
+    cfg = get_preset(preset, L=L)
+    idx = common.index(name, preset)
+    rep = _server(idx, cfg, "none").serve_open_loop(
+        ds.queries, rate_qps=500_000.0, duration_us=DURATION_US / 2)
+    return rep.qps
+
+
+def sweep_policies(name: str, sat_qps: float, preset: str = SYSTEM):
+    ds = common.dataset(name)
+    cfg = get_preset(preset, L=L)
+    idx = common.index(name, preset)
+    rows = []
+    for policy in ("none", "reject", "shed-oldest", "degrade"):
+        for factor in LOAD_FACTORS:
+            # a fresh server per cell: each measures its own cold-to-warm
+            # trajectory instead of inheriting the previous cell's backlog
+            srv = _server(idx, cfg, policy)
+            rep = srv.serve_open_loop(ds.queries,
+                                      rate_qps=factor * sat_qps,
+                                      duration_us=DURATION_US)
+            rec = (recall_at_k(rep.stats.ids, ds.gt[rep.query_indices],
+                               cfg.k) if rep.completed else 0.0)
+            rows.append({"dataset": name, "system": preset,
+                         "policy": policy, "load_x": factor, **rep.row(),
+                         "recall@10": round(rec, 4)})
+    return rows
+
+
+def p99_vs_duration(name: str, sat_qps: float, preset: str = SYSTEM):
+    """The acceptance check: at 2x saturation, doubling the window doubles
+    the uncontrolled p99 (backlog keeps growing) but leaves the bounded
+    policies' p99-of-admitted where it was."""
+    ds = common.dataset(name)
+    cfg = get_preset(preset, L=L)
+    idx = common.index(name, preset)
+    out = {}
+    for policy in ("none", "shed-oldest", "degrade"):
+        p99s = []
+        for dur in (DURATION_US, 2 * DURATION_US):
+            rep = _server(idx, cfg, policy).serve_open_loop(
+                ds.queries, rate_qps=2.0 * sat_qps, duration_us=dur)
+            p99s.append(rep.p99_latency_us)
+        growth = p99s[1] / p99s[0] if p99s[0] else float("inf")
+        out[policy] = (p99s, growth)
+        print(f"# {name} 2x-saturation p99 {policy:11s}: "
+              f"{p99s[0]:10.1f} -> {p99s[1]:10.1f} us "
+              f"(x{growth:.2f} for 2x window)"
+              + ("   [UNBOUNDED: grows with the window]" if growth > 1.5
+                 else "   [bounded]"))
+    return out
+
+
+def tenant_mix(name: str, sat_qps: float, preset: str = SYSTEM):
+    """Two tenants, one flooding: per-tenant hit rates under one shared
+    cache vs a partitioned one vs partition + utility rebalance."""
+    ds = common.dataset(name)
+    cfg = get_preset(preset, L=L)
+    idx = common.index(name, preset)
+    nq = len(ds.queries)
+    # tenant 0: a small revisited working set (first 8 queries, re-offered);
+    # tenant 1: the whole pool (a flood with little page re-use)
+    tenants = np.ones(nq, np.int64)
+    tenants[:8] = 0
+    pool = np.concatenate([np.tile(ds.queries[:8], (4, 1)), ds.queries])
+    tmap = np.concatenate([np.zeros(32, np.int64), tenants])
+    pages = 256
+    cells = [("shared", dict(tenants=1)),
+             ("partitioned", dict(tenants=2)),
+             ("rebalanced", dict(tenants=2, cache_rebalance_every=512))]
+    rows = []
+    for label, kw in cells:
+        srv = AnnServer(idx, cfg, common.MODEL, ServerConfig(
+            max_batch=16, cache_policy="lru",
+            cache_bytes=pages * idx.layout.page_bytes,
+            admission=_admission("shed-oldest"), **kw))
+        rep = srv.serve_open_loop(pool, rate_qps=1.5 * sat_qps,
+                                  duration_us=2 * DURATION_US,
+                                  tenants=tmap)
+        per = rep.per_tenant or {}
+        hr = [per.get(t, {}).get("cache_hit_rate", 0.0) for t in (0, 1)]
+        fair = min(hr) / max(hr) if max(hr) > 0 else 1.0
+        rows.append({"dataset": name, "cache": label,
+                     "qps": round(rep.qps, 1), "shed": rep.shed,
+                     "hit_rate_t0": hr[0], "hit_rate_t1": hr[1],
+                     "fairness_minmax": round(fair, 4),
+                     "cache_pages_t0": per.get(0, {}).get("cache_pages"),
+                     "cache_pages_t1": per.get(1, {}).get("cache_pages")})
+    return rows
+
+
+def main(datasets=("sift-like",)):
+    all_rows, mix_rows = [], []
+    for ds in datasets:
+        sat = probe_saturation(ds)
+        print(f"# {ds} saturation goodput ~ {sat:.0f} qps "
+              f"({SYSTEM}, L={L})")
+        all_rows.extend(sweep_policies(ds, sat))
+        p99_vs_duration(ds, sat)
+        mix_rows.extend(tenant_mix(ds, sat))
+    common.print_table(all_rows)
+    print()
+    common.print_table(mix_rows)
+    return all_rows, mix_rows
+
+
+if __name__ == "__main__":
+    main()

@@ -47,6 +47,11 @@ class QueryStats:
     # (repro/io/page_cache.py). Optional: only trace-replaying callers
     # (dynamic cache policies, prefetch) pay for it.
     page_trace: Optional[np.ndarray] = None
+    # (B,) int64 — per-query tenant ids, stamped by the SERVING layer (the
+    # kernel is tenant-blind): routes trace replay to per-tenant cache
+    # partitions and keys per-tenant report accounting. Optional: single-
+    # tenant callers never carry it.
+    tenants: Optional[np.ndarray] = None
 
     def __len__(self) -> int:
         return len(self.hops)
@@ -63,6 +68,7 @@ class QueryStats:
         "full_evals": "full_evals", "pq_evals": "pq_evals",
         "mem_hops": "mem_hops", "mem_evals": "mem_evals",
         "visited_pages": "visited_pages", "page_trace": "page_trace",
+        "tenants": "tenants",
     }
 
     @classmethod
@@ -72,6 +78,7 @@ class QueryStats:
               if k in out}
         kw.setdefault("visited_pages", None)
         kw.setdefault("page_trace", None)
+        kw.setdefault("tenants", None)
         return cls(**kw)
 
     @classmethod

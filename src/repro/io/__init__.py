@@ -1,13 +1,14 @@
 from repro.io.page_cache import (DYNAMIC_POLICIES, POLICIES, FIFOPageCache,
                                  LRUPageCache, PageCache,
-                                 PrefetchingPageStore, SharedCachePageStore,
-                                 TwoQPageCache, make_cache)
+                                 PartitionedPageCache, PrefetchingPageStore,
+                                 SharedCachePageStore, TwoQPageCache,
+                                 make_cache)
 from repro.io.page_store import (ArrayPageStore, BatchedPageStore,
                                  CachedPageStore, PageStore, StoreCounters,
                                  build_store)
 
 __all__ = ["ArrayPageStore", "BatchedPageStore", "CachedPageStore",
            "DYNAMIC_POLICIES", "FIFOPageCache", "LRUPageCache", "PageCache",
-           "PageStore", "POLICIES", "PrefetchingPageStore",
-           "SharedCachePageStore", "StoreCounters", "TwoQPageCache",
-           "build_store", "make_cache"]
+           "PageStore", "POLICIES", "PartitionedPageCache",
+           "PrefetchingPageStore", "SharedCachePageStore", "StoreCounters",
+           "TwoQPageCache", "build_store", "make_cache"]

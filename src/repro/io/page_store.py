@@ -254,7 +254,8 @@ class BatchedPageStore:
 
 def build_store(layout, cached_vertices: Optional[np.ndarray] = None,
                 batched: bool = False, *, cache_policy: str = "none",
-                cache_bytes: int = 0, prefetch: int = 0):
+                cache_bytes: int = 0, prefetch: int = 0, tenants: int = 1,
+                tenant_shares=None, rebalance_every: int = 0):
     """Compose the store stack for an index. Bottom-up:
 
       ArrayPageStore                          (always — the simulated SSD)
@@ -270,7 +271,12 @@ def build_store(layout, cached_vertices: Optional[np.ndarray] = None,
     subsystem: "static-vertex" requires `cached_vertices`; passing
     `cached_vertices` with the default policy keeps composing it (the
     pre-refactor surface). The stateful policies sit ABOVE the batch
-    coalescer — their state outlives the batch boundary."""
+    coalescer — their state outlives the batch boundary.
+
+    `tenants > 1` partitions the SAME `cache_bytes` budget across tenants
+    (PartitionedPageCache: static `tenant_shares` plus utility rebalance
+    every `rebalance_every` accesses when set); replay callers then pass
+    per-query tenant ids so each query charges its own partition."""
     from repro.io.page_cache import (DYNAMIC_POLICIES, PrefetchingPageStore,
                                      SharedCachePageStore, make_cache)
     known = ("none", "static-vertex") + DYNAMIC_POLICIES
@@ -287,13 +293,21 @@ def build_store(layout, cached_vertices: Optional[np.ndarray] = None,
         raise ValueError(
             f"prefetch={prefetch} needs a stateful cache_policy "
             f"{DYNAMIC_POLICIES} to hold the looked-ahead pages")
+    if tenants < 1:
+        raise ValueError(f"tenants={tenants} must be >= 1")
+    if tenants > 1 and cache_policy not in DYNAMIC_POLICIES:
+        raise ValueError(
+            f"tenants={tenants} partitions a stateful page cache — set "
+            f"cache_policy to one of {DYNAMIC_POLICIES}")
     store = ArrayPageStore(layout)
     if cached_vertices is not None and cached_vertices.any():
         store = CachedPageStore(store, cached_vertices)
     if batched:
         store = BatchedPageStore(store)
     if cache_policy in DYNAMIC_POLICIES:
-        cache = make_cache(cache_policy, cache_bytes, layout.page_bytes)
+        cache = make_cache(cache_policy, cache_bytes, layout.page_bytes,
+                           tenants=tenants, tenant_shares=tenant_shares,
+                           rebalance_every=rebalance_every)
         store = (PrefetchingPageStore(store, cache, lookahead=prefetch)
                  if prefetch > 0 else SharedCachePageStore(store, cache))
     return store

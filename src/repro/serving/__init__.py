@@ -1,4 +1,7 @@
+from repro.serving.admission import (ADMISSION_POLICIES, AdmissionConfig,
+                                     AdmissionController)
 from repro.serving.ann_server import (AnnServer, OpenLoopReport, ServerConfig,
                                       ServingReport)
 
-__all__ = ["AnnServer", "OpenLoopReport", "ServerConfig", "ServingReport"]
+__all__ = ["ADMISSION_POLICIES", "AdmissionConfig", "AdmissionController",
+           "AnnServer", "OpenLoopReport", "ServerConfig", "ServingReport"]

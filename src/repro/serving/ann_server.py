@@ -1,11 +1,35 @@
-"""Serving layer: concurrent ANN query serving, closed- and open-loop.
+"""Serving layer: concurrent ANN query serving — closed-loop, open-loop,
+admission-controlled, and multi-tenant.
 
-Closed loop (`serve_closed_loop`): W clients each keep one query in flight —
-submit, wait, resubmit (the paper's concurrency axis, §8; queue depth is set
-by the client count). Open loop (`serve_open_loop`): queries arrive by a
-Poisson process at `rate_qps` regardless of completions — the arrival-rate
-axis the §8 storage-centric/hybrid guideline actually turns on, since an
-open queue can grow without bound when the device saturates.
+The two measurement contracts
+-----------------------------
+Closed loop (`serve_closed_loop`): W clients each keep exactly ONE query in
+flight — submit, wait, resubmit (the paper's concurrency axis, §8; device
+queue depth is set by the client count). The loop is self-throttling:
+offered load automatically equals served load, so every submission
+completes, latency is bounded by construction, and the interesting axis is
+how latency and QPS move with W. The report (`ServingReport`) therefore
+covers the ENTIRE workload of workers x rounds queries.
+
+Open loop (`serve_open_loop`): queries arrive by a Poisson process at
+`rate_qps` for `duration_us`, INDEPENDENT of completions — the arrival-rate
+axis the §8 storage-centric/hybrid guideline actually turns on. Nothing
+throttles arrivals, so past device saturation the backlog and every latency
+percentile grow with the window length: an uncontrolled open-loop p99 is a
+statement about the measurement duration, not about the system. The report
+(`OpenLoopReport`) is therefore split by admission outcome: `offered`
+arrivals, `admitted` (= `completed`: every admitted query is served to
+completion, even past the window's end), `shed`, `degraded`; latency
+percentiles are over the ADMITTED work only, and throughput appears twice —
+`offered_qps` (arrivals / window) vs `qps` (goodput: completions / elapsed).
+
+Admission control (`ServerConfig.admission`, repro/serving/admission.py)
+decides at arrival time what enters the queue: a token bucket sheds above a
+configured rate; a bounded queue sheds by policy — "reject" (drop newest),
+"shed-oldest" (drop the query whose SLO is already lost), or "degrade"
+(admit everything but serve under pressure with a shrunken beam:
+`degrade_levels` multiply `L`/`beam_width`/`dw_max` by queue-pressure
+level, trading recall for service rate).
 
 Both loops share the dynamic batch scheduler: drain the queue at `max_batch`
 or `max_wait_us`, whichever binds first. With an SLO configured
@@ -21,23 +45,35 @@ service overlaps compute (the device model's `prefetch_overlap` rebate).
 With the default policy the batch accounting is the order-free cross-query
 union (BatchedPageStore), exactly the pre-refactor behaviour.
 
+Multi-tenancy: `ServerConfig.tenants > 1` splits the SAME `cache_bytes`
+budget into per-tenant partitions (repro/io/page_cache.py:
+PartitionedPageCache — static `tenant_shares` + optional utility
+rebalance), and both loops accept a `tenants=` array mapping each query-
+pool vector to its tenant. Per-query tenant ids travel on
+`QueryStats.tenants` (stamped here — the kernel is tenant-blind), route
+trace replay to the right partition, and come back as the `per_tenant`
+report column (admission counts, latency, per-tenant hit rates).
+
 Search execution is REAL (the jitted kernel runs every query; hops, pages,
 distance evals and result ids are measured; stateful policies replay the
-kernel's temporally ordered `page_trace`). Time is VIRTUAL: the container
-has no NVMe, so the clock advances by the paper-measured device model —
+kernel's temporally ordered `page_trace` — format documented in
+repro/io/page_cache.py). Time is VIRTUAL: the container has no NVMe, so
+the clock advances by the paper-measured device model —
 `SSDModel.concurrent_latency_us(queue_depth, ...)`. Latency includes queue
 wait + device service; QPS is completed queries over elapsed virtual time.
 
 Batches are padded to `max_batch` with duplicates of the batch's first query
 so the kernel compiles exactly once per (config, max_batch); padding rows
 are dropped from all accounting before any cache replay (a padded duplicate
-must not warm the cache twice).
+must not warm the cache twice). Degrade levels are the one exception to
+"exactly once": each distinct level is one more (config, max_batch) entry,
+which is why the level ladder is short.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -45,6 +81,7 @@ from repro.core.device_model import SSDModel
 from repro.core.search_kernel import search_batched
 from repro.core.stats import QueryStats
 from repro.io import DYNAMIC_POLICIES, build_store
+from repro.serving.admission import AdmissionConfig, AdmissionController
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,6 +96,12 @@ class ServerConfig:
     # --- SLO-aware batching ---
     slo_p99_us: Optional[float] = None   # dispatch early when the oldest
     #                                      query's p99 budget is at risk
+    # --- overload control (repro/serving/admission.py) ---
+    admission: Optional[AdmissionConfig] = None   # None = admit everything
+    # --- multi-tenant cache partitioning (repro/io/page_cache.py) ---
+    tenants: int = 1                     # >1 partitions cache_bytes
+    tenant_shares: Optional[Tuple[float, ...]] = None  # default: equal
+    cache_rebalance_every: int = 0       # utility rebalance period (0 = off)
 
     def __post_init__(self):
         if self.max_batch < 1:
@@ -86,6 +129,25 @@ class ServerConfig:
         if self.slo_p99_us is not None and self.slo_p99_us <= 0:
             raise ValueError(
                 f"slo_p99_us={self.slo_p99_us} must be positive")
+        if self.admission is not None \
+                and not isinstance(self.admission, AdmissionConfig):
+            raise ValueError(
+                f"admission={self.admission!r} must be an AdmissionConfig "
+                f"(or None to admit everything)")
+        if self.tenants < 1:
+            raise ValueError(f"tenants={self.tenants} must be >= 1")
+        if self.tenants > 1 and self.cache_policy not in DYNAMIC_POLICIES:
+            raise ValueError(
+                f"tenants={self.tenants} partitions the stateful page "
+                f"cache — set cache_policy to one of {DYNAMIC_POLICIES}")
+        if self.tenant_shares is not None and self.tenants == 1:
+            raise ValueError(
+                "tenant_shares needs tenants > 1 (one tenant owns the "
+                "whole budget)")
+        if self.cache_rebalance_every < 0:
+            raise ValueError(
+                f"cache_rebalance_every={self.cache_rebalance_every} "
+                f"must be >= 0 (0 = static shares)")
 
 
 @dataclasses.dataclass
@@ -105,6 +167,9 @@ class ServingReport:
     query_indices: np.ndarray    # (queries,) index into the submitted pool
     cache_hit_rate: float = 0.0  # stateful-policy hits / requested
     overlap_frac: float = 0.0    # prefetched fraction of issued reads
+    per_tenant: Optional[dict] = None   # {tenant: {completed, latency,
+    #                                     cache_hit_rate, ...}} when the
+    #                                     workload is multi-tenant
 
     def row(self) -> dict:
         return {
@@ -125,26 +190,37 @@ class OpenLoopReport:
     rate_qps: float              # offered Poisson arrival rate
     duration_us: float           # arrival window (service may run past it)
     offered: int                 # arrivals in the window
-    completed: int
+    completed: int               # == admitted (admitted work always runs)
     elapsed_us: float            # last completion time
-    qps: float                   # goodput: completed / elapsed
-    mean_latency_us: float
-    p99_latency_us: float
+    qps: float                   # GOODPUT: completed / elapsed
+    mean_latency_us: float       # over ADMITTED queries only
+    p99_latency_us: float        # p99-of-admitted (shed work has no latency)
     mean_batch_size: float
     pages_per_query: float
     issued_pages_per_query: float
     cache_hit_rate: float
     overlap_frac: float
     slo_p99_us: Optional[float]
-    slo_violation_frac: float    # fraction of queries past slo_p99_us
+    slo_violation_frac: float    # fraction of ADMITTED queries past the SLO
     stats: QueryStats
-    query_indices: np.ndarray
+    query_indices: np.ndarray    # pool index per COMPLETED query
+    # --- admission outcome (ServerConfig.admission) ---
+    offered_qps: float = 0.0     # arrivals / duration (vs `qps` = goodput)
+    admitted: int = 0            # offered == admitted + shed
+    shed: int = 0                # token-bucket + queue-policy drops
+    degraded: int = 0            # queries served at a degraded level
+    per_tenant: Optional[dict] = None   # {tenant: {offered, admitted, shed,
+    #                                     completed, latency, hit rates}}
 
     def row(self) -> dict:
         return {
             "rate_qps": round(self.rate_qps, 1),
             "offered": self.offered,
+            "offered_qps": round(self.offered_qps, 1),
             "qps": round(self.qps, 1),
+            "admitted": self.admitted,
+            "shed": self.shed,
+            "degraded": self.degraded,
             "mean_latency_us": round(self.mean_latency_us, 1),
             "p99_latency_us": round(self.p99_latency_us, 1),
             "mean_batch": round(self.mean_batch_size, 2),
@@ -176,26 +252,104 @@ class AnnServer:
             cached_vertices=index.cached if use_cache else None,
             batched=True,
             cache_policy=scfg.cache_policy if self._stateful else "none",
-            cache_bytes=scfg.cache_bytes, prefetch=scfg.prefetch)
+            cache_bytes=scfg.cache_bytes, prefetch=scfg.prefetch,
+            tenants=scfg.tenants if self._stateful else 1,
+            tenant_shares=scfg.tenant_shares,
+            rebalance_every=scfg.cache_rebalance_every)
+        self._degraded_cfgs = {}    # degrade level -> SearchConfig
 
     # -- batch executor ------------------------------------------------------
 
-    def _execute(self, qvecs: np.ndarray) -> QueryStats:
+    def _execute(self, qvecs: np.ndarray, cfg=None) -> QueryStats:
         """Run one batch through the kernel, padded to max_batch so the jit
-        cache holds exactly one entry per (config, max_batch). Stateful
-        cache policies additionally collect the temporally ordered page
-        trace their replay consumes."""
+        cache holds exactly one entry per (config, max_batch) — `cfg`
+        overrides the server's config for degraded dispatches (one more jit
+        entry per degrade level). Stateful cache policies additionally
+        collect the temporally ordered page trace their replay consumes."""
+        cfg = cfg or self.cfg
         b = len(qvecs)
         mb = self.server_cfg.max_batch
         if self.server_cfg.pad_batches and b < mb:
             qvecs = np.concatenate(
                 [qvecs, np.repeat(qvecs[:1], mb - b, axis=0)])
         stats = search_batched(
-            self.store, self.index.pq, self.cfg, qvecs,
+            self.store, self.index.pq, cfg, qvecs,
             medoid=self.index.medoid, memgraph=self.index.memgraph,
             batch=len(qvecs), collect_trace=self._stateful,
             account_kernel_io=False)
         return stats.take(b)
+
+    def _level_cfg(self, level: int):
+        """SearchConfig for a degrade level: the configured beam knobs
+        (`L`, `beam_width`, `dw_max`) scaled by the level's multiplier,
+        floored at the smallest legal values (`k`, 1, `dw_min`). Level 0 is
+        the undegraded config; levels are memoized so each compiles its
+        kernel exactly once."""
+        if level == 0:
+            return self.cfg
+        if level not in self._degraded_cfgs:
+            mult = self.server_cfg.admission.degrade_levels[level]
+            cfg = self.cfg
+            self._degraded_cfgs[level] = cfg.replace(
+                L=max(cfg.k, int(round(cfg.L * mult))),
+                beam_width=max(1, int(round(cfg.beam_width * mult))),
+                dw_max=max(cfg.dw_min, int(round(cfg.dw_max * mult))))
+        return self._degraded_cfgs[level]
+
+    def _tenant_map(self, queries: np.ndarray,
+                    tenants: Optional[np.ndarray]) -> np.ndarray:
+        """Validate and normalize the query-pool -> tenant mapping. Ids must
+        stay below ServerConfig.tenants whenever the cache is partitioned
+        (each id names a partition); with an unpartitioned cache any ids are
+        accepted and drive accounting only."""
+        if tenants is None:
+            return np.zeros(len(queries), np.int64)
+        t = np.asarray(tenants, np.int64).reshape(-1)
+        if len(t) != len(queries):
+            raise ValueError(
+                f"tenants has {len(t)} entries for {len(queries)} queries")
+        if len(t) and t.min() < 0:
+            raise ValueError("tenant ids must be >= 0")
+        scfg = self.server_cfg
+        if scfg.tenants > 1 and len(t) and t.max() >= scfg.tenants:
+            raise ValueError(
+                f"tenant id {t.max()} out of range for "
+                f"tenants={scfg.tenants} cache partitions")
+        return t
+
+    def _cache_tenant_rows(self) -> dict:
+        """Per-tenant cache-side accounting: replay hit rates from the
+        store (any stateful cache) plus current partition capacities when
+        the cache is partitioned."""
+        if not self._stateful:
+            return {}
+        rows = {t: {"cache_hit_rate": round(r, 4)}
+                for t, r in self.store.tenant_hit_rates().items()}
+        cache = self.store.cache
+        if getattr(cache, "tenant_aware", False):
+            for t, cap in enumerate(cache.capacities()):
+                rows.setdefault(t, {})["cache_pages"] = cap
+        return rows
+
+    def _per_tenant_report(self, tenant_ids, lat_arr,
+                           ac: Optional[AdmissionController] = None) -> dict:
+        """Merge completion-side latency stats, admission counts and cache
+        accounting into one {tenant: row} dict."""
+        ids = np.asarray(tenant_ids, np.int64)
+        out = {}
+        for t in np.unique(ids):
+            m = ids == t
+            out[int(t)] = {
+                "completed": int(m.sum()),
+                "mean_latency_us": round(float(lat_arr[m].mean()), 1),
+                "p99_latency_us": round(
+                    float(np.percentile(lat_arr[m], 99)), 1)}
+        if ac is not None:
+            for t, row in ac.per_tenant_rows().items():
+                out.setdefault(t, {"completed": 0}).update(row)
+        for t, row in self._cache_tenant_rows().items():
+            out.setdefault(t, {"completed": 0}).update(row)
+        return out
 
     def _batch_times_us(self, stats: QueryStats, depth: int, d: int):
         """Per-query service latencies for one batch at the given device
@@ -204,7 +358,8 @@ class AnnServer:
         (misses charged, hits free, prefetches overlapped); otherwise it is
         the order-free cross-query union of BatchedPageStore."""
         if self._stateful:
-            acct = self.store.replay_batch(stats.page_trace)
+            acct = self.store.replay_batch(stats.page_trace,
+                                           tenants=stats.tenants)
             pages = acct["per_query_issued"]
             dedup, overlap = 1.0, acct["overlap_frac"]
         else:
@@ -232,9 +387,15 @@ class AnnServer:
     # -- closed loop ---------------------------------------------------------
 
     def serve_closed_loop(self, queries: np.ndarray, workers: int,
-                          rounds: int = 1) -> ServingReport:
+                          rounds: int = 1,
+                          tenants: Optional[np.ndarray] = None
+                          ) -> ServingReport:
         """W clients, one outstanding query each, `rounds` queries per
-        client, query vectors drawn round-robin from `queries`."""
+        client, query vectors drawn round-robin from `queries`. `tenants`
+        optionally maps each query-pool vector to a tenant id (see the
+        module doc): closed loops need no admission control (they self-
+        throttle), but the cache partition a query charges — and the
+        per-tenant report — still follow the mapping."""
         if workers <= 0:
             raise ValueError(
                 f"workers={workers} must be >= 1: a closed loop with no "
@@ -246,6 +407,8 @@ class AnnServer:
         queries = np.asarray(queries, np.float32)
         d = queries.shape[1]
         scfg = self.server_cfg
+        tenant_of = self._tenant_map(queries, tenants)
+        multi_tenant = tenants is not None or scfg.tenants > 1
         total = workers * rounds
         # (submit_time, client, query_index); heap orders by time
         events: List[tuple] = [(0.0, c, c % len(queries))
@@ -254,7 +417,7 @@ class AnnServer:
         issued = [1] * workers      # queries issued per client so far
         exec_free = 0.0
         lat_out, qidx_out, stats_out = [], [], []
-        service_out, batch_sizes = [], []
+        service_out, batch_sizes, tenant_out = [], [], []
         requested_total = issued_total = hits_total = 0
         overlap_w = 0.0
         t_end = 0.0
@@ -281,6 +444,7 @@ class AnnServer:
 
             qvecs = queries[[q for _, _, q in batch]]
             stats = self._execute(qvecs)
+            stats.tenants = tenant_of[[q for _, _, q in batch]]
             # device queue depth = queries in flight in this batch
             lat, acct = self._batch_times_us(stats, len(batch), d)
             requested_total += acct["requested"]
@@ -295,6 +459,7 @@ class AnnServer:
                 lat_out.append(t_done - t_sub)
                 service_out.append(t_done - dispatch)
                 qidx_out.append(q)
+                tenant_out.append(int(tenant_of[q]))
                 if issued[c] < rounds:
                     nxt = (c + issued[c] * workers) % len(queries)
                     heapq.heappush(events, (float(t_done), c, nxt))
@@ -318,17 +483,61 @@ class AnnServer:
             query_indices=np.asarray(qidx_out, np.int64),
             cache_hit_rate=(hits_total / requested_total
                             if requested_total else 0.0),
-            overlap_frac=(overlap_w / issued_total if issued_total else 0.0))
+            overlap_frac=(overlap_w / issued_total if issued_total else 0.0),
+            per_tenant=(self._per_tenant_report(tenant_out, lat_arr)
+                        if multi_tenant else None))
 
     # -- open loop -----------------------------------------------------------
 
+    def _empty_open_report(self, rate_qps: float, duration_us: float,
+                           ac: AdmissionController,
+                           per_tenant: Optional[dict]) -> OpenLoopReport:
+        """Report for a run that completed nothing (no arrivals, or every
+        arrival shed) — no kernel compile is paid."""
+        zi = np.zeros(0, np.int64)
+        zf = np.zeros(0, np.float64)
+        empty = QueryStats(
+            ids=np.zeros((0, self.cfg.k), np.int64),
+            dists=np.zeros((0, self.cfg.k), np.float64),
+            hops=zi, page_reads=zf, cache_hits=zf, n_read_records=zf,
+            n_eff=zf, full_evals=zf, pq_evals=zf, mem_hops=zi,
+            mem_evals=zi)
+        return OpenLoopReport(
+            rate_qps=rate_qps, duration_us=duration_us, offered=ac.offered,
+            completed=0, elapsed_us=0.0, qps=0.0, mean_latency_us=0.0,
+            p99_latency_us=0.0, mean_batch_size=0.0, pages_per_query=0.0,
+            issued_pages_per_query=0.0, cache_hit_rate=0.0,
+            overlap_frac=0.0, slo_p99_us=self.server_cfg.slo_p99_us,
+            slo_violation_frac=0.0, stats=empty,
+            query_indices=np.zeros(0, np.int64),
+            offered_qps=ac.offered / (duration_us * 1e-6),
+            admitted=ac.admitted, shed=ac.shed, degraded=0,
+            per_tenant=per_tenant)
+
     def serve_open_loop(self, queries: np.ndarray, rate_qps: float,
-                        duration_us: float, seed: int = 0) -> OpenLoopReport:
+                        duration_us: float, seed: int = 0,
+                        tenants: Optional[np.ndarray] = None,
+                        arrivals: Optional[np.ndarray] = None
+                        ) -> OpenLoopReport:
         """Poisson arrivals at `rate_qps` for `duration_us` of virtual time,
         query vectors drawn round-robin. Arrivals do not wait for
         completions (open loop), so past the device's saturation point the
-        queue — and the latency — grows with the backlog; every admitted
+        queue — and the latency — grows with the backlog; every ADMITTED
         arrival is served to completion, even past the window's end.
+
+        With `ServerConfig.admission` set, each arrival first passes the
+        `AdmissionController` (token bucket, then the bounded queue's
+        reject / shed-oldest / degrade policy — see the module doc): shed
+        arrivals never execute and carry no latency, so the report's
+        percentiles are p99-of-admitted, and `qps` is goodput against
+        `offered_qps`. Under "degrade", dispatches map queue pressure to a
+        shrunken-beam SearchConfig (`_level_cfg`) instead of dropping.
+
+        `tenants` optionally maps each query-pool vector to a tenant id
+        (routes cache-partition charging and keys the `per_tenant` report).
+        `arrivals` replaces the Poisson process with explicit sorted
+        arrival times in us (deterministic admission tests: bursts at t=0,
+        etc.); `rate_qps` then only scales the report's offered-load column.
 
         The batcher dispatches at `max_batch` / `max_wait_us` as in the
         closed loop; with `slo_p99_us` set it also dispatches as soon as the
@@ -342,90 +551,125 @@ class AnnServer:
         queries = np.asarray(queries, np.float32)
         d = queries.shape[1]
         scfg = self.server_cfg
-        rng = np.random.default_rng(seed)
+        tenant_of = self._tenant_map(queries, tenants)
+        multi_tenant = tenants is not None or scfg.tenants > 1
 
-        mean_gap = 1e6 / rate_qps
-        arrivals: List[float] = []
-        t = float(rng.exponential(mean_gap))
-        while t < duration_us:
-            arrivals.append(t)
-            t += float(rng.exponential(mean_gap))
-        arr = np.asarray(arrivals)
+        if arrivals is None:
+            rng = np.random.default_rng(seed)
+            mean_gap = 1e6 / rate_qps
+            times: List[float] = []
+            t = float(rng.exponential(mean_gap))
+            while t < duration_us:
+                times.append(t)
+                t += float(rng.exponential(mean_gap))
+            arr = np.asarray(times)
+        else:
+            arr = np.asarray(arrivals, np.float64).reshape(-1)
+            if len(arr) and (np.any(arr < 0) or np.any(np.diff(arr) < 0)):
+                raise ValueError(
+                    "explicit arrivals must be non-negative and sorted")
         n = len(arr)
+        ac = AdmissionController(scfg.admission)
         if n == 0:
-            # nothing arrived: report without paying a kernel compile
-            zi = np.zeros(0, np.int64)
-            zf = np.zeros(0, np.float64)
-            empty = QueryStats(
-                ids=np.zeros((0, self.cfg.k), np.int64),
-                dists=np.zeros((0, self.cfg.k), np.float64),
-                hops=zi, page_reads=zf, cache_hits=zf, n_read_records=zf,
-                n_eff=zf, full_evals=zf, pq_evals=zf, mem_hops=zi,
-                mem_evals=zi)
-            return OpenLoopReport(
-                rate_qps=rate_qps, duration_us=duration_us, offered=0,
-                completed=0, elapsed_us=0.0, qps=0.0, mean_latency_us=0.0,
-                p99_latency_us=0.0, mean_batch_size=0.0, pages_per_query=0.0,
-                issued_pages_per_query=0.0, cache_hit_rate=0.0,
-                overlap_frac=0.0, slo_p99_us=scfg.slo_p99_us,
-                slo_violation_frac=0.0, stats=empty,
-                query_indices=np.zeros(0, np.int64))
+            per_tenant = (self._per_tenant_report([], np.zeros(0), ac)
+                          if multi_tenant else None)
+            return self._empty_open_report(rate_qps, duration_us, ac,
+                                           per_tenant)
         qidx = np.arange(n) % len(queries)
+        arr_tenant = tenant_of[qidx]
 
         exec_free = 0.0
         est_service: Optional[float] = None
         lat_out, stats_out, batch_sizes = [], [], []
+        qidx_out, tenant_out = [], []
         requested_total = issued_total = hits_total = 0
         overlap_w = 0.0
+        degraded_n = 0
         t_end = 0.0
         i = 0
-        while i < n:
-            t0 = arr[i]
+        mb = scfg.max_batch
+        pend = ac.pending
+        while i < n or pend:
+            if not pend:
+                # idle until the next arrival; its admission decision is
+                # made at its own arrival instant
+                t0 = float(arr[i])
+                ac.offer(t0, i, int(arr_tenant[i]),
+                         executor_idle=exec_free <= t0)
+                i += 1
+                continue
+            t0 = pend[0][0]
             deadline = t0 + scfg.max_wait_us
             if scfg.slo_p99_us is not None:
                 # the oldest query must still fit its p99 budget after the
                 # (estimated) service time — dispatch before it cannot
                 budget = scfg.slo_p99_us - (est_service or 0.0)
                 deadline = min(deadline, t0 + max(budget, 0.0))
-            t_full = (arr[i + scfg.max_batch - 1]
-                      if i + scfg.max_batch <= n else np.inf)
-            dispatch = max(exec_free, min(deadline, t_full), t0)
-            j = i + 1
-            while j < n and j - i < scfg.max_batch and arr[j] <= dispatch:
-                j += 1
-            stats = self._execute(queries[qidx[i:j]])
-            lat, acct = self._batch_times_us(stats, j - i, d)
+            # admissions while the batcher would still be waiting to fill
+            while i < n and len(pend) < mb and arr[i] <= deadline:
+                ac.offer(float(arr[i]), i, int(arr_tenant[i]))
+                i += 1
+            t_fill = pend[mb - 1][0] if len(pend) >= mb else np.inf
+            dispatch = max(exec_free, min(deadline, t_fill), t0)
+            # admissions up to the dispatch instant (under backlog this is
+            # where the queue bound binds and shedding happens)
+            while i < n and arr[i] <= dispatch:
+                ac.offer(float(arr[i]), i, int(arr_tenant[i]))
+                i += 1
+            level = ac.pressure_level()
+            batch = ac.take_batch(mb)
+            b_times = np.asarray([t for t, _, _ in batch])
+            b_items = [it for _, it, _ in batch]
+            b_tenants = np.asarray([tn for _, _, tn in batch], np.int64)
+            stats = self._execute(queries[qidx[b_items]],
+                                  self._level_cfg(level))
+            stats.tenants = b_tenants
+            lat, acct = self._batch_times_us(stats, len(batch), d)
             requested_total += acct["requested"]
             issued_total += acct["issued"]
             hits_total += acct["hits"]
             overlap_w += acct["overlap_frac"] * acct["issued"]
+            if level > 0:
+                degraded_n += len(batch)
             done = dispatch + lat
             exec_free = dispatch + float(lat.max())
             t_end = max(t_end, exec_free)
-            lat_out.extend((done - arr[i:j]).tolist())
-            batch_sizes.append(j - i)
+            lat_out.extend((done - b_times).tolist())
+            qidx_out.extend(qidx[b_items].tolist())
+            tenant_out.extend(b_tenants.tolist())
+            batch_sizes.append(len(batch))
             stats_out.append(stats)
             mean_lat = float(lat.mean())
             est_service = (mean_lat if est_service is None
                            else 0.5 * est_service + 0.5 * mean_lat)
-            i = j
 
+        completed = len(lat_out)
+        per_tenant = (self._per_tenant_report(tenant_out,
+                                              np.asarray(lat_out), ac)
+                      if multi_tenant else None)
+        if completed == 0:
+            return self._empty_open_report(rate_qps, duration_us, ac,
+                                           per_tenant)
         all_stats = QueryStats.concat(stats_out)
         lat_arr = np.asarray(lat_out)
         slo = scfg.slo_p99_us
         return OpenLoopReport(
             rate_qps=rate_qps, duration_us=duration_us, offered=n,
-            completed=n, elapsed_us=t_end,
-            qps=n / (t_end * 1e-6) if t_end > 0 else 0.0,
+            completed=completed, elapsed_us=t_end,
+            qps=completed / (t_end * 1e-6) if t_end > 0 else 0.0,
             mean_latency_us=float(lat_arr.mean()),
             p99_latency_us=float(np.percentile(lat_arr, 99)),
             mean_batch_size=float(np.mean(batch_sizes)),
             pages_per_query=float(all_stats.page_reads.mean()),
-            issued_pages_per_query=issued_total / n,
+            issued_pages_per_query=issued_total / completed,
             cache_hit_rate=(hits_total / requested_total
                             if requested_total else 0.0),
             overlap_frac=(overlap_w / issued_total if issued_total else 0.0),
             slo_p99_us=slo,
             slo_violation_frac=(float(np.mean(lat_arr > slo))
                                 if slo is not None else 0.0),
-            stats=all_stats, query_indices=qidx)
+            stats=all_stats,
+            query_indices=np.asarray(qidx_out, np.int64),
+            offered_qps=n / (duration_us * 1e-6),
+            admitted=ac.admitted, shed=ac.shed, degraded=degraded_n,
+            per_tenant=per_tenant)

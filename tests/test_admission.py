@@ -1,0 +1,276 @@
+"""Overload-control subsystem (repro/serving/admission.py + the
+serve_open_loop wiring): token-bucket and bounded-queue semantics on
+synthetic arrival streams (fast, no index), and the admission edge cases
+the ISSUE names — zero-capacity queue, burst arrivals at t=0, all-shed
+saturation, degrade-under-pressure — against a real served index."""
+import numpy as np
+import pytest
+
+from repro.core import get_preset, recall_at_k
+from repro.serving import (AdmissionConfig, AdmissionController, AnnServer,
+                           ServerConfig)
+
+
+# --- AdmissionConfig validation (fast) -------------------------------------
+
+
+@pytest.mark.fast
+@pytest.mark.parametrize("kw,msg", [
+    (dict(policy="drop-all"), "policy='drop-all'"),
+    (dict(queue_cap=-1), "queue_cap=-1"),
+    (dict(rate_qps=-2.0), "rate_qps=-2.0"),
+    (dict(burst=0), "burst=0"),
+    (dict(degrade_levels=()), "must not be empty"),
+    (dict(degrade_levels=(1.0, 0.0)), "must all be in"),
+    (dict(degrade_levels=(1.0, 1.5)), "must all be in"),
+    (dict(degrade_levels=(0.5, 0.25)), r"degrade_levels\[0\]"),
+    (dict(degrade_levels=(1.0, 0.25, 0.5)), "non-increasing"),
+])
+def test_admission_config_rejects_invalid(kw, msg):
+    with pytest.raises(ValueError, match=msg):
+        AdmissionConfig(**kw)
+
+
+@pytest.mark.fast
+def test_server_config_admission_and_tenant_validation():
+    with pytest.raises(ValueError, match="must be an AdmissionConfig"):
+        ServerConfig(admission="reject")
+    with pytest.raises(ValueError, match="tenants=0"):
+        ServerConfig(tenants=0)
+    with pytest.raises(ValueError, match="stateful page cache"):
+        ServerConfig(tenants=2)
+    with pytest.raises(ValueError, match="tenant_shares needs tenants > 1"):
+        ServerConfig(tenant_shares=(1.0,))
+    with pytest.raises(ValueError, match="cache_rebalance_every=-1"):
+        ServerConfig(cache_rebalance_every=-1)
+    cfg = ServerConfig(cache_policy="lru", cache_bytes=1 << 20, tenants=2,
+                       tenant_shares=(0.7, 0.3),
+                       admission=AdmissionConfig(policy="degrade"))
+    assert cfg.tenants == 2 and cfg.admission.policy == "degrade"
+
+
+# --- AdmissionController unit behaviour (fast) -----------------------------
+
+
+@pytest.mark.fast
+def test_token_bucket_burst_at_t0():
+    """Burst arrivals at t=0: exactly `burst` tokens exist, nothing has
+    refilled yet, so exactly `burst` pass and the rest are rate-shed."""
+    ac = AdmissionController(AdmissionConfig(
+        policy="reject", queue_cap=100, rate_qps=1000.0, burst=4))
+    decisions = [ac.offer(0.0, i) for i in range(16)]
+    assert decisions == [True] * 4 + [False] * 12
+    assert ac.offered == 16 and ac.admitted == 4
+    assert ac.shed_rate == 12 and ac.shed_queue == 0
+    assert ac.offered == ac.admitted + ac.shed
+
+
+@pytest.mark.fast
+def test_token_bucket_refills_at_rate():
+    """1000 qps refill = one token per 1000 us: a post-burst arrival gets a
+    token exactly when the bucket has accrued one."""
+    ac = AdmissionController(AdmissionConfig(
+        policy="reject", queue_cap=100, rate_qps=1000.0, burst=1))
+    assert ac.offer(0.0, 0)            # the initial token
+    assert not ac.offer(500.0, 1)      # only half a token accrued
+    assert ac.offer(1600.0, 2)         # >= 1 token since the last take
+    assert ac.shed == 1
+
+
+@pytest.mark.fast
+def test_zero_capacity_queue_admits_only_into_idle_system():
+    """queue_cap=0: no waiting room — an arrival is admitted only when the
+    queue is empty AND the executor is idle (the in-service slot)."""
+    ac = AdmissionController(AdmissionConfig(policy="reject", queue_cap=0))
+    assert ac.offer(0.0, 0, executor_idle=True)
+    assert not ac.offer(1.0, 1, executor_idle=True)   # queue occupied
+    ac.take_batch(4)                                  # dispatched
+    assert not ac.offer(2.0, 2, executor_idle=False)  # executor busy
+    assert ac.offer(3.0, 3, executor_idle=True)
+    assert ac.offered == 4 and ac.admitted == 2 and ac.shed_queue == 2
+
+
+@pytest.mark.fast
+def test_shed_oldest_drops_from_the_front():
+    ac = AdmissionController(AdmissionConfig(policy="shed-oldest",
+                                             queue_cap=2))
+    for i in range(5):
+        ac.offer(float(i), i)
+    assert [item for _, item, _ in ac.pending] == [3, 4]
+    assert ac.offered == 5 and ac.admitted == 2 and ac.shed == 3
+    # zero-capacity shed-oldest with an empty queue sheds the arrival
+    ac0 = AdmissionController(AdmissionConfig(policy="shed-oldest",
+                                              queue_cap=0))
+    assert not ac0.offer(0.0, 0, executor_idle=False)
+    assert ac0.shed_queue == 1
+
+
+@pytest.mark.fast
+def test_reject_keeps_oldest_sheds_newest():
+    ac = AdmissionController(AdmissionConfig(policy="reject", queue_cap=2))
+    for i in range(5):
+        ac.offer(float(i), i)
+    assert [item for _, item, _ in ac.pending] == [0, 1]
+    assert ac.admitted == 2 and ac.shed_queue == 3
+
+
+@pytest.mark.fast
+def test_degrade_admits_everything_and_maps_pressure():
+    ac = AdmissionController(AdmissionConfig(
+        policy="degrade", queue_cap=4, degrade_levels=(1.0, 0.5, 0.25)))
+    for i in range(3):
+        ac.offer(float(i), i)
+    assert ac.pressure_level() == 0          # below cap
+    for i in range(3, 6):
+        ac.offer(float(i), i)
+    assert ac.pressure_level() == 1          # one cap of backlog
+    for i in range(6, 20):
+        ac.offer(float(i), i)
+    assert ac.pressure_level() == 2          # clamped at the ladder's end
+    assert ac.admitted == 20 and ac.shed == 0
+
+
+@pytest.mark.fast
+def test_per_tenant_admission_counters():
+    ac = AdmissionController(AdmissionConfig(policy="shed-oldest",
+                                             queue_cap=1))
+    ac.offer(0.0, 0, tenant=0)
+    ac.offer(1.0, 1, tenant=1)     # sheds tenant 0's query (the oldest)
+    rows = ac.per_tenant_rows()
+    assert rows[0] == {"offered": 1, "admitted": 0, "shed": 1}
+    assert rows[1] == {"offered": 1, "admitted": 1, "shed": 0}
+    assert ac.offered == sum(r["offered"] for r in rows.values())
+
+
+# --- served admission edge cases (real index) ------------------------------
+
+
+def _srv(idx, cfg, admission=None, max_batch=4, **kw):
+    return AnnServer(idx, cfg, server_cfg=ServerConfig(
+        max_batch=max_batch, admission=admission, **kw))
+
+
+def test_open_loop_without_admission_unchanged(base_index, small_dataset):
+    """ServerConfig.admission=None must reproduce the PR 2 open loop
+    exactly: everything admitted, nothing shed or degraded."""
+    cfg = get_preset("baseline", L=16)
+    rep = _srv(base_index, cfg).serve_open_loop(
+        small_dataset.queries, rate_qps=4000.0, duration_us=10000.0, seed=7)
+    assert rep.admitted == rep.offered == rep.completed
+    assert rep.shed == 0 and rep.degraded == 0
+    assert rep.offered_qps > 0 and rep.per_tenant is None
+    assert len(rep.query_indices) == rep.completed
+
+
+def test_all_shed_saturation_reports_cleanly(base_index, small_dataset):
+    """A token bucket with a starved refill sheds every arrival: the report
+    must stay consistent (no NaNs, no kernel execution implied)."""
+    cfg = get_preset("baseline", L=16)
+    srv = _srv(base_index, cfg, AdmissionConfig(
+        policy="reject", queue_cap=8, rate_qps=0.001, burst=1))
+    rep = srv.serve_open_loop(small_dataset.queries, rate_qps=8000.0,
+                              duration_us=20000.0, seed=3)
+    assert rep.offered > 1
+    assert rep.admitted <= 1           # at most the single initial token
+    assert rep.shed >= rep.offered - 1
+    assert rep.offered == rep.admitted + rep.shed
+    assert rep.completed == rep.admitted == len(rep.stats)
+    assert np.isfinite(rep.p99_latency_us)
+
+
+def test_shed_oldest_bounds_p99_under_overload(base_index, small_dataset):
+    """Acceptance shape: at far-past-saturation offered load, the bounded
+    queue keeps p99-of-admitted orders below the uncontrolled open loop,
+    and the shed count absorbs the overload."""
+    cfg = get_preset("baseline", L=16)
+    kw = dict(rate_qps=64000.0, duration_us=10000.0, seed=7)
+    rep_none = _srv(base_index, cfg).serve_open_loop(
+        small_dataset.queries, **kw)
+    rep_shed = _srv(base_index, cfg, AdmissionConfig(
+        policy="shed-oldest", queue_cap=8)).serve_open_loop(
+        small_dataset.queries, **kw)
+    assert rep_shed.shed > 0
+    assert rep_shed.offered == rep_none.offered     # same arrival process
+    assert rep_shed.p99_latency_us < rep_none.p99_latency_us
+    # queue bound => wait is capped by ~queue_cap batches of service
+    assert rep_shed.p99_latency_us < rep_none.p99_latency_us / 2
+
+
+def test_degrade_sheds_nothing_and_shrinks_the_beam(base_index,
+                                                    small_dataset):
+    """Degrade serves everyone: no drops, degraded queries read fewer pages
+    (smaller beam), p99 lands under the uncontrolled loop, and recall
+    stays sane (the floor is L=k)."""
+    cfg = get_preset("baseline", L=32)
+    kw = dict(rate_qps=64000.0, duration_us=10000.0, seed=7)
+    rep_none = _srv(base_index, cfg).serve_open_loop(
+        small_dataset.queries, **kw)
+    srv = _srv(base_index, cfg, AdmissionConfig(
+        policy="degrade", queue_cap=8, degrade_levels=(1.0, 0.5, 0.25)))
+    rep = srv.serve_open_loop(small_dataset.queries, **kw)
+    assert rep.shed == 0 and rep.completed == rep.offered
+    assert rep.degraded > 0
+    assert rep.pages_per_query < rep_none.pages_per_query
+    assert rep.p99_latency_us < rep_none.p99_latency_us
+    rec = recall_at_k(rep.stats.ids, small_dataset.gt[rep.query_indices],
+                      cfg.k)
+    assert rec > 0.5, rec
+
+
+def test_burst_at_t0_served_through_explicit_arrivals(base_index,
+                                                      small_dataset):
+    """Deterministic burst: 24 arrivals at t=0 against a 2-deep bounded
+    queue — the first batch fills straight from the burst, the bounded
+    queue sheds the overflow, and every admitted query completes."""
+    cfg = get_preset("baseline", L=16)
+    srv = _srv(base_index, cfg, AdmissionConfig(policy="reject",
+                                                queue_cap=2), max_batch=4)
+    rep = srv.serve_open_loop(small_dataset.queries, rate_qps=1000.0,
+                              duration_us=1000.0,
+                              arrivals=np.zeros(24))
+    assert rep.offered == 24
+    # the idle-system bypass admits the first arrival, which then occupies
+    # the 2-deep queue until dispatch, so exactly one more fits
+    assert rep.admitted == 2 and rep.shed == 22
+    assert rep.completed == 2 == len(rep.stats)
+    assert rep.mean_batch_size <= 4.0
+    with pytest.raises(ValueError, match="non-negative and sorted"):
+        srv.serve_open_loop(small_dataset.queries, rate_qps=1000.0,
+                            duration_us=1000.0,
+                            arrivals=np.asarray([5.0, 1.0]))
+
+
+def test_multi_tenant_partitioned_serving(base_index, small_dataset):
+    """Two tenants on a partitioned LRU: the report carries per-tenant
+    admission + latency + hit-rate rows and partition capacities."""
+    cfg = get_preset("baseline", L=16)
+    tenants = (np.arange(len(small_dataset.queries)) % 2).astype(np.int64)
+    srv = AnnServer(base_index, cfg, server_cfg=ServerConfig(
+        max_batch=4, cache_policy="lru",
+        cache_bytes=128 * base_index.layout.page_bytes, tenants=2))
+    rep = srv.serve_open_loop(small_dataset.queries, rate_qps=4000.0,
+                              duration_us=20000.0, seed=5, tenants=tenants)
+    assert set(rep.per_tenant) == {0, 1}
+    for t in (0, 1):
+        row = rep.per_tenant[t]
+        assert row["offered"] == row["admitted"] == row["completed"] > 0
+        assert 0.0 <= row["cache_hit_rate"] <= 1.0
+        assert row["cache_pages"] == 64
+    # tenant ids out of range for the partition count must be rejected
+    with pytest.raises(ValueError, match="out of range"):
+        srv.serve_open_loop(small_dataset.queries, rate_qps=1000.0,
+                            duration_us=1000.0,
+                            tenants=np.full(len(small_dataset.queries), 7))
+
+
+def test_closed_loop_carries_tenant_accounting(base_index, small_dataset):
+    cfg = get_preset("baseline", L=16)
+    tenants = (np.arange(len(small_dataset.queries)) % 2).astype(np.int64)
+    srv = AnnServer(base_index, cfg, server_cfg=ServerConfig(
+        max_batch=4, cache_policy="lru",
+        cache_bytes=128 * base_index.layout.page_bytes, tenants=2))
+    rep = srv.serve_closed_loop(small_dataset.queries, workers=8, rounds=2,
+                                tenants=tenants)
+    assert set(rep.per_tenant) == {0, 1}
+    assert sum(r["completed"] for r in rep.per_tenant.values()) == 16
+    assert rep.stats.tenants is not None and len(rep.stats.tenants) == 16

@@ -1,0 +1,43 @@
+"""Documentation stays healthy: every relative link in the top-level and
+docs/ markdown resolves to a real file (the same check the CI docs job
+runs via tools/check_links.py), and the link checker itself catches
+breakage."""
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tools"))
+
+import check_links  # noqa: E402
+
+pytestmark = pytest.mark.fast
+
+DOC_TARGETS = ["README.md", "ARCHITECTURE.md", "docs"]
+
+
+def test_repo_markdown_has_no_broken_relative_links():
+    files = list(check_links.iter_md_files(
+        [str(REPO / t) for t in DOC_TARGETS]))
+    assert files, "no markdown files found — did the layout move?"
+    broken = [b for md in files for b in check_links.check_file(md)]
+    assert not broken, "\n".join(broken)
+
+
+def test_checker_flags_broken_and_accepts_valid(tmp_path):
+    good = tmp_path / "target.md"
+    good.write_text("# here\n")
+    md = tmp_path / "doc.md"
+    md.write_text(
+        "[ok](target.md) [ok#frag](target.md#frag) "
+        "[url](https://example.com/x.md) [anchor](#local)\n"
+        "[missing](nope.md)\n")
+    broken = check_links.check_file(md)
+    assert len(broken) == 1 and "nope.md" in broken[0]
+    assert "doc.md:2" in broken[0]
+
+
+def test_checker_rejects_non_markdown_argument(tmp_path):
+    with pytest.raises(SystemExit, match="not a markdown"):
+        list(check_links.iter_md_files([str(tmp_path / "x.py")]))

@@ -11,8 +11,9 @@ from repro.core import SSDModel
 from repro.core.pages import build_layout
 from repro.io import (DYNAMIC_POLICIES, ArrayPageStore, BatchedPageStore,
                       CachedPageStore, FIFOPageCache, LRUPageCache,
-                      PageStore, PrefetchingPageStore, SharedCachePageStore,
-                      TwoQPageCache, build_store, make_cache)
+                      PageStore, PartitionedPageCache, PrefetchingPageStore,
+                      SharedCachePageStore, TwoQPageCache, build_store,
+                      make_cache)
 
 pytestmark = pytest.mark.fast
 
@@ -110,8 +111,11 @@ def test_replay_accounting_and_counters(tiny_layout):
     assert acct == {"requested": 5, "issued": 3, "hits": 2,
                     "per_query_issued": acct["per_query_issued"],
                     "prefetch_issued": 0, "overlap_frac": 0.0,
-                    "hit_rate": 2 / 5}
+                    "hit_rate": 2 / 5,
+                    "per_tenant": {0: {"requested": 5, "hits": 2,
+                                       "issued": 3, "hit_rate": 2 / 5}}}
     np.testing.assert_array_equal(acct["per_query_issued"], [3.0])
+    assert store.tenant_hit_rates() == {0: 2 / 5}
     c = store.counters
     assert (c.pages_requested, c.pages_fetched, c.cache_hits) == (5, 3, 2)
     assert c.records_fetched == 3 * tiny_layout.n_p
@@ -292,3 +296,149 @@ def test_prefetch_overlap_rebate_monotone_and_bounded():
     comp = float(m._compute_us(kw["full_evals"], kw["pq_evals"],
                                kw["mem_evals"], kw["d"], kw["pq_m"])[0])
     assert base - lats[-1] <= comp + 1e-9
+
+
+# --- PartitionedPageCache: multi-tenant partitioning -----------------------
+
+
+def test_partitioned_single_tenant_degenerates_to_base_policy():
+    """Acceptance: with one tenant the partition gets the whole budget and
+    every access routes straight through — the hit/miss sequence is
+    bit-identical to the bare policy, for every policy."""
+    rng = np.random.default_rng(3)
+    seq = rng.integers(0, 48, 2000)
+    for cls in (LRUPageCache, FIFOPageCache, TwoQPageCache):
+        base = cls(12)
+        part = PartitionedPageCache(12, 1, policy=cls.name)
+        for p in seq:
+            assert base.access(int(p)) == part.access(int(p)), cls.name
+        assert len(base) == len(part)
+
+
+def test_partitioned_share_allocation_and_validation():
+    c = PartitionedPageCache(10, 3, shares=[0.5, 0.3, 0.2])
+    assert c.capacities() == [5, 3, 2]
+    # 1-page floor even for a vanishing share
+    c = PartitionedPageCache(8, 2, shares=[0.999, 0.001])
+    assert c.capacities() == [7, 1]
+    assert sum(PartitionedPageCache(7, 3).capacities()) == 7
+    with pytest.raises(ValueError, match="tenants=0"):
+        PartitionedPageCache(8, 0)
+    with pytest.raises(ValueError, match="1-page floor"):
+        PartitionedPageCache(2, 3)
+    with pytest.raises(ValueError, match="3 entries for 2 tenants"):
+        PartitionedPageCache(8, 2, shares=[1, 1, 1])
+    with pytest.raises(ValueError, match="must all be positive"):
+        PartitionedPageCache(8, 2, shares=[1.0, 0.0])
+    with pytest.raises(ValueError, match="unknown partition policy"):
+        PartitionedPageCache(8, 2, policy="arc")
+
+
+def test_partitioned_isolates_noisy_neighbor():
+    """The partition IS the isolation: a tenant-1 scan that would flush a
+    shared LRU cannot touch tenant 0's resident hot set."""
+    shared = LRUPageCache(8)
+    part = PartitionedPageCache(8, 2)          # 4 pages each
+    for p in range(4):                         # tenant 0's hot set
+        shared.access(p)
+        part.access(p, 0)
+    for p in range(100, 180):                  # tenant 1's one-touch scan
+        shared.access(p)
+        part.access(p, 1)
+    assert all(p not in shared for p in range(4))      # flushed
+    hits_shared = sum(shared.access(p) for p in range(4))
+    hits_part = sum(part.access(p, 0) for p in range(4))
+    assert hits_shared == 0 and hits_part == 4
+    assert part.tenant_hit_rates()[1] == 0.0   # the scan never re-used
+
+
+def test_partitioned_rebalance_moves_capacity_to_utility():
+    """Utility rebalance: a tenant whose misses the doubled-capacity shadow
+    would convert takes pages from a tenant with no marginal gain; the
+    total budget is conserved and the donor keeps its 1-page floor."""
+    c = PartitionedPageCache(16, 2, shares=[3, 1], rebalance_every=40,
+                             rebalance_step=2)
+    for i in range(4000):
+        c.access(i % 6, 0)     # hot set of 6 in 12 pages: zero marginal gain
+        c.access(i % 8, 1)     # cycle of 8 in 4 pages: every miss convertible
+    assert c.rebalances > 0
+    assert c.capacities()[1] >= 8, c.capacities()
+    assert sum(c.capacities()) == 16
+    # the donor was never squeezed below its own working set
+    assert c.tenant_hit_rates()[0] > 0.9
+    assert c.tenant_hit_rates()[1] > 0.5
+
+
+def test_partitioned_static_shares_do_not_move():
+    c = PartitionedPageCache(16, 2, shares=[3, 1])      # rebalance off
+    for i in range(2000):
+        c.access(i % 6, 0)
+        c.access(i % 8, 1)
+    assert c.capacities() == [12, 4] and c.rebalances == 0
+
+
+def test_policy_resize_evicts_in_policy_order():
+    lru = LRUPageCache(4)
+    for p in (0, 1, 2, 3):
+        lru.access(p)
+    lru.access(0)               # renew 0: LRU order is now 1,2,3,0
+    lru.resize(2)
+    assert 3 in lru and 0 in lru and 1 not in lru and 2 not in lru
+    fifo = FIFOPageCache(4)
+    for p in (0, 1, 2, 3):
+        fifo.access(p)
+    fifo.access(0)              # FIFO: renewal does not matter
+    fifo.resize(2)
+    assert 2 in fifo and 3 in fifo and 0 not in fifo
+    q = TwoQPageCache(8)
+    for p in range(6):
+        q.access(p)
+    q.resize(4)
+    assert len(q) <= 4
+    with pytest.raises(ValueError, match="capacity_pages=0"):
+        lru.resize(0)
+    with pytest.raises(NotImplementedError):
+        PartitionedPageCache(8, 2).resize(16)
+
+
+def test_replay_batch_routes_tenants_to_partitions(tiny_layout):
+    """Two queries on different tenants: each warms only its own partition,
+    and the per-tenant accounting splits exactly."""
+    cache = PartitionedPageCache(8, 2)
+    store = SharedCachePageStore(ArrayPageStore(tiny_layout), cache)
+    trace = np.stack([_trace([0, 1], [2])[0], _trace([0, 1], [3])[0]])
+    acct = store.replay_batch(trace, tenants=[0, 1])
+    # no sharing across partitions: tenant 1 re-misses pages 0 and 1
+    assert acct["hits"] == 0 and acct["issued"] == 6
+    assert acct["per_tenant"][0] == {"requested": 3, "hits": 0, "issued": 3,
+                                     "hit_rate": 0.0}
+    assert acct["per_tenant"][1]["issued"] == 3
+    # second replay: each tenant hits its own warmed partition
+    acct2 = store.replay_batch(trace, tenants=[0, 1])
+    assert acct2["hits"] == 6 and acct2["issued"] == 0
+    assert store.tenant_hit_rates() == {0: 0.5, 1: 0.5}
+    assert cache.tenant_hit_rates() == [0.5, 0.5]
+    with pytest.raises(ValueError, match="2 entries for a 1-query"):
+        store.replay_batch(_trace([0]), tenants=[0, 1])
+    with pytest.raises(ValueError, match=">= 0"):
+        store.replay_batch(_trace([0]), tenants=[-1])
+    with pytest.raises(ValueError, match="out of range"):
+        store.replay_batch(_trace([0]), tenants=[5])
+
+
+def test_build_store_tenant_surface(tiny_layout):
+    st = build_store(tiny_layout, batched=True, cache_policy="2q",
+                     cache_bytes=8 * tiny_layout.page_bytes, tenants=2,
+                     tenant_shares=(0.75, 0.25), rebalance_every=64)
+    assert isinstance(st.cache, PartitionedPageCache)
+    assert st.cache.policy == "2q"
+    assert st.cache.capacities() == [6, 2]
+    assert st.cache.rebalance_every == 64
+    one = build_store(tiny_layout, cache_policy="lru",
+                      cache_bytes=8 * tiny_layout.page_bytes, tenants=1)
+    assert isinstance(one.cache, LRUPageCache)   # no partition wrapper
+    with pytest.raises(ValueError, match="tenants=0"):
+        build_store(tiny_layout, cache_policy="lru",
+                    cache_bytes=8 * tiny_layout.page_bytes, tenants=0)
+    with pytest.raises(ValueError, match="stateful page cache"):
+        build_store(tiny_layout, tenants=2)

@@ -1,0 +1,66 @@
+#!/usr/bin/env python
+"""Fail on broken RELATIVE links in markdown files.
+
+    python tools/check_links.py README.md ARCHITECTURE.md docs
+
+Arguments are markdown files or directories (scanned recursively for
+*.md). For every inline link or image `[text](target)` whose target is
+not an absolute URL or a pure anchor, the target must exist on disk
+relative to the file that references it (an optional `#fragment` suffix is
+stripped; fragments themselves are not validated). Exit code 1 lists every
+broken link. Used by the CI docs job and tests/test_docs.py.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# inline links/images: [text](target) — skips reference-style and autolinks
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def iter_md_files(args):
+    for a in args:
+        p = Path(a)
+        if p.is_dir():
+            yield from sorted(p.rglob("*.md"))
+        elif p.suffix == ".md":
+            yield p
+        else:
+            raise SystemExit(f"not a markdown file or directory: {a}")
+
+
+def check_file(md: Path) -> list:
+    broken = []
+    text = md.read_text(encoding="utf-8")
+    for m in _LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(_SKIP_PREFIXES):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        resolved = (md.parent / path).resolve()
+        if not resolved.exists():
+            line = text[:m.start()].count("\n") + 1
+            broken.append(f"{md}:{line}: broken link -> {target}")
+    return broken
+
+
+def main(argv) -> int:
+    files = list(iter_md_files(argv or ["."]))
+    if not files:
+        print("check_links: no markdown files found", file=sys.stderr)
+        return 1
+    broken = [b for md in files for b in check_file(md)]
+    for b in broken:
+        print(b, file=sys.stderr)
+    print(f"check_links: {len(files)} files, "
+          f"{len(broken)} broken relative links")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
