@@ -1,0 +1,185 @@
+"""Sharded-store sweep: shard count x placement x arrival rate.
+
+The open-loop sweep (benchmarks/open_loop.py) finds WHERE one device
+saturates; past that point the only way to keep pushing the throughput
+frontier is more devices. This sweep drives `AnnServer` over the sharded
+PageStore (repro/io/sharded_store.py) and shows
+
+  1. saturation goodput scaling with shard count (1/2/4/8) under the
+     balanced round-robin placement — the acceptance criterion is that it
+     increases monotonically from 1 to 4 shards,
+  2. an open-loop rate sweep per (shards, placement) cell, reporting
+     qps / p99 / shard_imbalance / max_shard_util per row,
+  3. a SKEWED workload (a few hot queries dominating the pool) at a fixed
+     shard count, where the `replicated` hot-set placement (top pages of a
+     `page_trace` profile replicated on every device, routed least-loaded)
+     beats `round-robin`'s fixed page homes on latency, with `contiguous`
+     as the deliberate worst case (the hot range pins one device).
+
+How to read the output: `shard_imbalance` is max/mean issued reads across
+shards (1.0 = perfectly balanced placement — lower is better);
+`max_shard_util` is the hottest device's busy fraction. At equal offered
+load a lower imbalance means the max-over-shards device time — and so p99 —
+drops; at saturation it means higher goodput.
+
+Env knobs (dataset sizing in benchmarks/common.py):
+  REPRO_SH_DURATION   arrival window in us of virtual time (default 20000)
+  REPRO_SH_SHARDS     comma-separated shard counts (default 1,2,4,8)
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import get_preset, recall_at_k
+from repro.core.search_kernel import search_batched
+from repro.io import build_store, profile_from_trace
+from repro.serving import AnnServer, ServerConfig
+
+DURATION_US = float(os.environ.get("REPRO_SH_DURATION", 20000.0))
+SHARDS = tuple(int(s) for s in os.environ.get(
+    "REPRO_SH_SHARDS", "1,2,4,8").split(","))
+SYSTEM = "starling"
+L = 32
+
+
+def _server(idx, cfg, shards: int, placement: str = "round-robin",
+            page_profile=None, max_batch: int = 16):
+    return AnnServer(idx, cfg, common.MODEL, ServerConfig(
+        max_batch=max_batch, shards=shards, placement=placement),
+        page_profile=page_profile)
+
+
+def page_profile(idx, cfg, queries) -> np.ndarray:
+    """Per-page access counts from one profiling pass over `queries` —
+    what the replicated placement ranks its hot set by."""
+    store = build_store(idx.layout, batched=True)
+    st = search_batched(store, idx.pq, cfg, queries, medoid=idx.medoid,
+                        memgraph=idx.memgraph, collect_trace=True,
+                        account_kernel_io=False)
+    return profile_from_trace(st.page_trace, idx.layout.num_pages)
+
+
+def skewed_pool(queries: np.ndarray, hot: int = 4,
+                repeats: int = 8) -> np.ndarray:
+    """A pool where `hot` queries are offered `repeats` extra times each —
+    their pages dominate the device load."""
+    return np.concatenate([np.tile(queries[:hot], (repeats, 1)), queries])
+
+
+def saturation_scaling(name: str, preset: str = SYSTEM):
+    """Acceptance: flood each shard count and report goodput — saturation
+    rate must increase monotonically 1 -> 4 shards under round-robin."""
+    ds = common.dataset(name)
+    cfg = get_preset(preset, L=L)
+    idx = common.index(name, preset)
+    rows, sats = [], {}
+    for shards in SHARDS:
+        rep = _server(idx, cfg, shards).serve_open_loop(
+            ds.queries, rate_qps=500_000.0, duration_us=DURATION_US / 2)
+        sats[shards] = rep.qps
+        rows.append({"dataset": name, "system": preset, "shards": shards,
+                     "placement": "round-robin",
+                     "sat_qps": round(rep.qps, 1),
+                     "mean_latency_us": round(rep.mean_latency_us, 1),
+                     "shard_imbalance": rep.row().get("shard_imbalance", 1.0),
+                     "max_shard_util": rep.row().get("max_shard_util", "")})
+    upto4 = [sats[s] for s in SHARDS if s <= 4]
+    mono = all(b > a for a, b in zip(upto4, upto4[1:]))
+    print(f"# {name} saturation goodput by shards: "
+          + " ".join(f"S={s}:{q:.0f}" for s, q in sats.items())
+          + ("   [monotone 1->4: OK]" if mono
+             else "   [NOT MONOTONE 1->4 — regression]"))
+    return rows, sats
+
+
+def rate_sweep(name: str, sat_qps: float, preset: str = SYSTEM):
+    """Open-loop rate sweep per (shards, placement): the §8 concurrency
+    frontier, now with the device count as an axis."""
+    ds = common.dataset(name)
+    cfg = get_preset(preset, L=L)
+    idx = common.index(name, preset)
+    rows = []
+    for shards in SHARDS:
+        # placement is moot on a single device — one cell, not three
+        placements = (("round-robin",) if shards == 1
+                      else ("round-robin", "contiguous"))
+        for placement in placements:
+            for factor in (0.5, 1.0, 2.0):
+                srv = _server(idx, cfg, shards, placement)
+                rep = srv.serve_open_loop(ds.queries,
+                                          rate_qps=factor * sat_qps,
+                                          duration_us=DURATION_US)
+                rec = (recall_at_k(rep.stats.ids, ds.gt[rep.query_indices],
+                                   cfg.k) if rep.completed else 0.0)
+                row = {"dataset": name, "system": preset,
+                       "shards": shards, "placement": placement,
+                       "load_x": factor, **rep.row(),
+                       "recall@10": round(rec, 4)}
+                # print_table derives columns from the FIRST row, which is
+                # the unsharded baseline — pin the shard columns so the
+                # placement comparison survives into the table
+                row.setdefault("shard_imbalance", 1.0)
+                row.setdefault("max_shard_util", "")
+                rows.append(row)
+    return rows
+
+
+def skewed_placements(name: str, sat_qps: float, preset: str = SYSTEM,
+                      shards: int = 4):
+    """The placement showdown at a skewed workload: profile the pool once,
+    then serve it under each placement at moderate load and at saturation."""
+    ds = common.dataset(name)
+    cfg = get_preset(preset, L=L)
+    idx = common.index(name, preset)
+    pool = skewed_pool(ds.queries)
+    prof = page_profile(idx, cfg, pool)
+    rows = []
+    for placement in ("round-robin", "contiguous", "replicated"):
+        profile = prof if placement == "replicated" else None
+        for label, rate in (("0.5x", 0.5 * sat_qps), ("flood", 500_000.0)):
+            srv = _server(idx, cfg, shards, placement, page_profile=profile)
+            rep = srv.serve_open_loop(pool, rate_qps=rate,
+                                      duration_us=DURATION_US)
+            rows.append({"dataset": name, "shards": shards,
+                         "placement": placement, "load": label,
+                         "qps": round(rep.qps, 1),
+                         "mean_latency_us": round(rep.mean_latency_us, 1),
+                         "p99_latency_us": round(rep.p99_latency_us, 1),
+                         "shard_imbalance":
+                             rep.row().get("shard_imbalance", ""),
+                         "max_shard_util":
+                             rep.row().get("max_shard_util", "")})
+    base = {r["load"]: r for r in rows if r["placement"] == "round-robin"}
+    repl = {r["load"]: r for r in rows if r["placement"] == "replicated"}
+    for load in base:
+        better = (repl[load]["mean_latency_us"]
+                  <= base[load]["mean_latency_us"])
+        print(f"# {name} skewed @ {load}: replicated "
+              f"mean={repl[load]['mean_latency_us']} "
+              f"imb={repl[load]['shard_imbalance']} vs round-robin "
+              f"mean={base[load]['mean_latency_us']} "
+              f"imb={base[load]['shard_imbalance']}"
+              + ("   [replicated wins]" if better else ""))
+    return rows
+
+
+def main(datasets=("sift-like",)):
+    scale_rows, sweep_rows, skew_rows = [], [], []
+    for ds in datasets:
+        rows, sats = saturation_scaling(ds)
+        scale_rows.extend(rows)
+        sweep_rows.extend(rate_sweep(ds, sats[min(SHARDS)]))
+        skew_rows.extend(skewed_placements(ds, sats[min(SHARDS)]))
+    common.print_table(scale_rows)
+    print()
+    common.print_table(sweep_rows)
+    print()
+    common.print_table(skew_rows)
+    return scale_rows, sweep_rows, skew_rows
+
+
+if __name__ == "__main__":
+    main()

@@ -17,6 +17,11 @@ parallelism is covered, then ∝ depth, so throughput saturates at the
 IOPS/bandwidth ceiling). At queue_depth == workers it reproduces
 `query_latency_us` exactly.
 
+Sharding (distributed serving): with `shard_pages`/`shard_depths` the same
+model runs per shard device — each shard serves its slice of a batch at its
+own queue depth, and a query's page service is the max over its shards'
+completion times (shards are parallel devices; the slowest one gates).
+
 The TPU variant of the same model (used by kernels/page_scan) books HBM
 bytes at 819 GB/s with DMA/compute overlap — see benchmarks/roofline.py.
 """
@@ -53,13 +58,20 @@ class SSDModel:
                     (self.bw_4k + self.bw_16k) / 2)
         return self.iops_16k, self.bw_16k
 
+    def read_service_us(self, page_bytes: int) -> float:
+        """Raw device service time of ONE read — 1/IOPS or the byte time,
+        whichever binds — before any queueing or worker amortization. This
+        is the utilization unit: issued reads x this, over elapsed time, is
+        the fraction of the device's saturation capacity actually used."""
+        iops, bw = self._rates(page_bytes)
+        return max(1.0 / iops, page_bytes / bw) * 1e6
+
     def page_service_us(self, page_bytes: int) -> float:
         """Mean device service time per page at saturation, amortized
         across workers (queue-theoretic throughput view) — exactly the
         pre-refactor fixed-concurrency model, independent of the
         device_parallelism floor below."""
-        iops, bw = self._rates(page_bytes)
-        return max(1.0 / iops, page_bytes / bw) * self.workers * 1e6
+        return self.read_service_us(page_bytes) * self.workers
 
     def concurrent_page_service_us(self, page_bytes: int,
                                    queue_depth: float) -> float:
@@ -68,9 +80,8 @@ class SSDModel:
         at the knee latency, device_parallelism x the raw per-read time),
         then grows ∝ depth (each page waits behind depth-1 peers), so
         throughput saturates at the IOPS/bandwidth ceiling."""
-        iops, bw = self._rates(page_bytes)
-        per_read = max(1.0 / iops, page_bytes / bw)
-        return per_read * max(queue_depth, float(self.device_parallelism)) * 1e6
+        per_read = self.read_service_us(page_bytes)
+        return per_read * max(queue_depth, float(self.device_parallelism))
 
     def _compute_us(self, full_evals, pq_evals, mem_evals, d, pq_m):
         return (full_evals * d * self.ns_per_dim_full
@@ -89,7 +100,8 @@ class SSDModel:
     def concurrent_latency_us(self, queue_depth, *, hops, pages, full_evals,
                               pq_evals, mem_evals, d, pq_m, page_bytes,
                               pipeline=False, page_dedup: float = 1.0,
-                              prefetch_overlap: float = 0.0):
+                              prefetch_overlap: float = 0.0,
+                              shard_pages=None, shard_depths=None):
         """Per-query latency with `queue_depth` queries in flight on the
         device. `page_dedup` (<= 1) rebates the page volume when a batch
         scheduler coalesced duplicate reads (BatchedPageStore).
@@ -97,9 +109,38 @@ class SSDModel:
         look-ahead prefetcher issued during the previous hop's compute
         (PrefetchingPageStore): that I/O is hidden behind compute, but only
         up to the compute actually available. Pipeline search already
-        overlaps I/O and compute wholesale, so the rebate is subsumed there."""
-        t_page = self.concurrent_page_service_us(page_bytes, queue_depth)
-        io = pages * page_dedup * t_page + hops * self.issue_us
+        overlaps I/O and compute wholesale, so the rebate is subsumed there.
+
+        Sharded stores (ShardedPageStore) pass `shard_pages` ((B, S): reads
+        each query charged on each of S shard devices) and `shard_depths`
+        ((S,): queries with work on that shard, its device queue depth).
+        Shards serve in parallel, so a query's page-service time is the MAX
+        over its shards' completion times — the batch finishes when its
+        slowest device does, and an imbalanced placement is visibly slower
+        than a balanced one at equal total pages. `pages` is ignored on
+        this path (the split already carries the volume); hop issue
+        overhead and the dedup/prefetch rebates apply unchanged."""
+        if shard_pages is not None:
+            sp = np.asarray(shard_pages, np.float64)
+            if sp.ndim != 2:
+                raise ValueError(
+                    f"shard_pages must be (B, shards); got {sp.shape}")
+            if shard_depths is None:
+                depths = np.full(sp.shape[1], float(queue_depth))
+            else:
+                depths = np.asarray(shard_depths, np.float64).reshape(-1)
+                if len(depths) != sp.shape[1]:
+                    raise ValueError(
+                        f"shard_depths has {len(depths)} entries for "
+                        f"{sp.shape[1]} shards")
+            t_shard = np.asarray([
+                self.concurrent_page_service_us(page_bytes, qd)
+                for qd in depths])
+            page_service = (sp * page_dedup * t_shard).max(axis=1)
+        else:
+            t_page = self.concurrent_page_service_us(page_bytes, queue_depth)
+            page_service = pages * page_dedup * t_page
+        io = page_service + hops * self.issue_us
         comp = self._compute_us(full_evals, pq_evals, mem_evals, d, pq_m)
         if pipeline:
             # per-step overlap approximated at query granularity

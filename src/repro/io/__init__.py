@@ -5,10 +5,15 @@ from repro.io.page_cache import (DYNAMIC_POLICIES, POLICIES, FIFOPageCache,
                                  make_cache)
 from repro.io.page_store import (ArrayPageStore, BatchedPageStore,
                                  CachedPageStore, PageStore, StoreCounters,
-                                 build_store)
+                                 build_store, charge_inner_reads)
+from repro.io.sharded_store import (PLACEMENTS, Placement, ShardedPageStore,
+                                    make_placement, make_shard_caches,
+                                    profile_from_trace)
 
 __all__ = ["ArrayPageStore", "BatchedPageStore", "CachedPageStore",
-           "DYNAMIC_POLICIES", "FIFOPageCache", "LRUPageCache", "PageCache",
-           "PageStore", "POLICIES", "PartitionedPageCache",
-           "PrefetchingPageStore", "SharedCachePageStore", "StoreCounters",
-           "TwoQPageCache", "build_store", "make_cache"]
+           "DYNAMIC_POLICIES", "FIFOPageCache", "LRUPageCache", "PLACEMENTS",
+           "PageCache", "PageStore", "POLICIES", "PartitionedPageCache",
+           "Placement", "PrefetchingPageStore", "ShardedPageStore",
+           "SharedCachePageStore", "StoreCounters", "TwoQPageCache",
+           "build_store", "charge_inner_reads", "make_cache",
+           "make_placement", "make_shard_caches", "profile_from_trace"]

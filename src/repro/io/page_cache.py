@@ -63,7 +63,8 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.io.page_store import StoreCounters, fetch_mirroring_inner
+from repro.io.page_store import (StoreCounters, book_charged_reads,
+                                 charge_inner_reads, fetch_mirroring_inner)
 
 
 class PageCache:
@@ -85,6 +86,14 @@ class PageCache:
 
     def access(self, page: int) -> bool:
         raise NotImplementedError
+
+    def admit(self, page: int) -> None:
+        """Non-demand warm path (look-ahead prefetch): admit the page
+        without the demand-side accounting a subclass may keep. The base
+        policies keep no stats, so admission IS probe-and-admit; stats-
+        keeping caches (PartitionedPageCache) override this so prefetch
+        traffic cannot inflate demand hit rates or rebalance windows."""
+        self.access(page)
 
     def resize(self, capacity_pages: int) -> None:
         """Change capacity in place, evicting per policy if shrinking —
@@ -333,6 +342,14 @@ class PartitionedPageCache(PageCache):
                 self._rebalance()
         return hit
 
+    def admit(self, page: int, tenant: int = 0) -> None:
+        """Non-demand warm (look-ahead prefetch): admit into the tenant's
+        partition WITHOUT touching `t_accesses`/`t_hits`, the shadow LRU,
+        or the rebalance window — prefetch traffic is not demand, and
+        counting it would skew `tenant_hit_rates()` and could flip the
+        utility rebalance."""
+        self.parts[tenant].access(page)
+
     def _rebalance(self) -> None:
         self._since = 0
         order = sorted(range(self.tenants), key=lambda t: self._gain[t])
@@ -389,6 +406,21 @@ POLICIES = {c.name: c for c in (LRUPageCache, FIFOPageCache, TwoQPageCache)}
 DYNAMIC_POLICIES = tuple(POLICIES)
 
 
+def floor_capacity_pages(cache_bytes: int, page_bytes: int, parts: int,
+                         noun: str) -> int:
+    """Translate a byte budget to whole-page capacity, validating that each
+    of `parts` partitions (`noun`: "tenants" | "shards") gets its 1-page
+    floor — the error names the BYTES the caller configured, not just the
+    derived page count."""
+    capacity = cache_bytes // page_bytes
+    if capacity < parts:
+        raise ValueError(
+            f"cache_bytes={cache_bytes} is only {capacity} page(s) of "
+            f"{page_bytes} bytes — cannot give each of {parts} {noun} its "
+            f"1-page floor (need cache_bytes >= {parts * page_bytes})")
+    return capacity
+
+
 def make_cache(policy: str, cache_bytes: int, page_bytes: int,
                tenants: int = 1,
                tenant_shares: Optional[Sequence[float]] = None,
@@ -406,8 +438,12 @@ def make_cache(policy: str, cache_bytes: int, page_bytes: int,
     if tenants < 1:
         raise ValueError(f"tenants={tenants} must be >= 1")
     if tenants > 1:
+        # validate in BYTES here: the page-floor error the partition itself
+        # raises never mentions the budget the caller actually configured
+        capacity = floor_capacity_pages(cache_bytes, page_bytes, tenants,
+                                        "tenants")
         return PartitionedPageCache(
-            cache_bytes // page_bytes, tenants, policy=policy,
+            capacity, tenants, policy=policy,
             shares=tenant_shares, rebalance_every=rebalance_every)
     return POLICIES[policy](cache_bytes // page_bytes)
 
@@ -476,8 +512,7 @@ class SharedCachePageStore:
         misses = page_ids[~hit]
         self.counters.pages_fetched += len(misses)
         self.counters.records_fetched += len(misses) * self.layout.n_p
-        if len(misses):
-            self.inner.fetch(misses)
+        charge_inner_reads(self.inner, misses)
         lay = self.layout
         return {"vids": lay.page_vids[page_ids],
                 "vecs": lay.page_vecs[page_ids],
@@ -492,6 +527,14 @@ class SharedCachePageStore:
     def note_kernel_io(self, stats) -> None:
         # replay_batch is this store's accounting path; forward only
         self.inner.note_kernel_io(stats)
+
+    def charge(self, page_ids: np.ndarray) -> None:
+        """Accounting-only reads from a layer above: book 1:1 and forward.
+        Charges bypass the cache (they are already-issued device reads, not
+        probes), so residency is untouched."""
+        page_ids = np.asarray(page_ids, np.int64).reshape(-1)
+        book_charged_reads(self.counters, len(page_ids), self.layout.n_p)
+        self.inner.charge(page_ids)
 
     # -- trace replay (the serving-path accounting) --------------------------
 
@@ -542,6 +585,7 @@ class SharedCachePageStore:
             int(t): {"requested": 0, "hits": 0, "issued": 0}
             for t in np.unique(tns)}
         requested = hits = issued = prefetched = 0
+        charged: List[int] = []     # every device read, in issue order
         for b in range(B):
             t = int(tns[b])
             tacct = per_tenant[t]
@@ -550,20 +594,24 @@ class SharedCachePageStore:
                 if len(row) == 0:
                     continue
                 # look-ahead: issue the next hops' pages while h computes
-                # (into — and gated on — this query's own partition)
+                # (into — and gated on — this query's own partition).
+                # admit(), not access(): prefetch traffic is not demand,
+                # so it must not move demand hit rates or the partitioned
+                # cache's shadow/rebalance window
                 for ahead in hop_pages[h + 1: h + 1 + self.lookahead]:
                     for p in ahead:
                         resident = (int(p) in self.cache.parts[t] if ta
                                     else int(p) in self.cache)
                         if not resident:
                             if ta:
-                                self.cache.access(int(p), t)
+                                self.cache.admit(int(p), t)
                             else:
-                                self.cache.access(int(p))
+                                self.cache.admit(int(p))
                             issued += 1
                             prefetched += 1
                             per_query[b] += 1
                             tacct["issued"] += 1
+                            charged.append(int(p))
                 for p in row:
                     requested += 1
                     tacct["requested"] += 1
@@ -576,12 +624,17 @@ class SharedCachePageStore:
                         issued += 1
                         per_query[b] += 1
                         tacct["issued"] += 1
+                        charged.append(int(p))
         self.accesses += requested
         self.prefetch_issued += prefetched
         self.counters.pages_requested += requested
         self.counters.cache_hits += hits
         self.counters.pages_fetched += issued
         self.counters.records_fetched += issued * self.layout.n_p
+        # forward the misses' charge to the inner store: a decorator whose
+        # reads never reach the device it decorates breaks every
+        # cross-stack rollup (savings(), as_dict() audits)
+        charge_inner_reads(self.inner, charged)
         for t, a in per_tenant.items():
             life = self.tenant_counters.setdefault(
                 t, {"requested": 0, "hits": 0, "issued": 0})

@@ -18,6 +18,11 @@ every layer accounts I/O through one object instead of ad-hoc fields.
 
 The contract (duck-typed; see PageStore Protocol):
   fetch(page_ids, vids=None) -> dict(vids, vecs, nbrs)   [+ counters moving]
+  charge(page_ids)        — accounting-only device reads (no records built):
+                            every id is one read already past any dedup, so
+                            each layer books it 1:1 and forwards down — the
+                            conservation spine that keeps decorator counters
+                            equal to inner movement on replay/coalesce paths
   kernel_arrays() -> (page_vids, page_vecs, page_nbrs, vid2page, vid2slot)
   vertex_cache_mask() -> (n,) bool
   note_kernel_io(stats)   — fold kernel-measured reads/hits into counters
@@ -65,6 +70,35 @@ def fetch_mirroring_inner(counters: StoreCounters, inner, page_ids,
     return out
 
 
+def book_charged_reads(counters: StoreCounters, n_pages: int,
+                       n_p: int) -> None:
+    """Book `n_pages` accounting-only device reads (already past any dedup
+    or cache decision) into `counters` — the shared body of every layer's
+    `charge`."""
+    counters.pages_requested += n_pages
+    counters.pages_fetched += n_pages
+    counters.records_fetched += n_pages * n_p
+
+
+def charge_inner_reads(inner, page_ids) -> None:
+    """Charge `page_ids` to `inner` as device reads, preferring its
+    accounting-only `charge` path. The fallback (a store without `charge`)
+    issues `fetch` in rounds of unique ids so a coalescing store cannot
+    dedup a genuine re-read: a page evicted and missed again IS two device
+    reads, and conservation demands every layer book both."""
+    if len(page_ids) == 0:
+        return
+    if hasattr(inner, "charge"):
+        inner.charge(np.asarray(page_ids, np.int64).reshape(-1))
+        return
+    counts = {}
+    for p in page_ids:
+        counts[int(p)] = counts.get(int(p), 0) + 1
+    while counts:
+        inner.fetch(np.fromiter(counts.keys(), np.int64, len(counts)))
+        counts = {p: c - 1 for p, c in counts.items() if c > 1}
+
+
 @runtime_checkable
 class PageStore(Protocol):
     """Anything that can serve pages to the kernel and serving layers."""
@@ -73,6 +107,8 @@ class PageStore(Protocol):
 
     def fetch(self, page_ids: np.ndarray,
               vids: Optional[np.ndarray] = None) -> dict: ...
+
+    def charge(self, page_ids: np.ndarray) -> None: ...
 
     def kernel_arrays(self) -> tuple: ...
 
@@ -105,6 +141,16 @@ class ArrayPageStore:
         return {"vids": self.layout.page_vids[page_ids],
                 "vecs": self.layout.page_vecs[page_ids],
                 "nbrs": self.layout.page_nbrs[page_ids]}
+
+    def charge(self, page_ids: np.ndarray) -> None:
+        """Accounting-only reads: same counter movement as `fetch`, no
+        record materialization (the serving hot path's replay/coalesce
+        charges are pure accounting — the kernel already holds the page
+        arrays)."""
+        page_ids = np.asarray(page_ids, np.int64).reshape(-1)
+        if np.any((page_ids < 0) | (page_ids >= self.layout.num_pages)):
+            raise IndexError("page id out of range")
+        book_charged_reads(self.counters, len(page_ids), self.layout.n_p)
 
     def kernel_arrays(self) -> tuple:
         if self._kernel_cache is None:
@@ -164,6 +210,14 @@ class CachedPageStore:
         out["cached_vecs"] = lay.page_vecs[lay.vid2page[hv], lay.vid2slot[hv]]
         out["cached_nbrs"] = lay.page_nbrs[lay.vid2page[hv], lay.vid2slot[hv]]
         return out
+
+    def charge(self, page_ids: np.ndarray) -> None:
+        """Accounting-only reads already past any cache decision above:
+        book 1:1 and forward, so this layer's movement mirrors the inner
+        store's."""
+        page_ids = np.asarray(page_ids, np.int64).reshape(-1)
+        book_charged_reads(self.counters, len(page_ids), self.layout.n_p)
+        self.inner.charge(page_ids)
 
     def kernel_arrays(self) -> tuple:
         return self.inner.kernel_arrays()
@@ -228,17 +282,30 @@ class BatchedPageStore:
         """Accounting-only variant of fetch_for_queries for the serving hot
         path: moves the same counters but skips materializing the union's
         records (the kernel already holds the page arrays, so re-copying
-        vectors/neighbors per batch would be pure waste)."""
+        vectors/neighbors per batch would be pure waste). The union IS
+        charged to the inner store (`charge`), so cross-stack counter
+        rollups stay conserved on the record-free path too."""
         visited_pages = np.asarray(visited_pages, bool)
+        union = np.flatnonzero(visited_pages.any(axis=0))
         requested = int(visited_pages.sum())
-        issued = int(visited_pages.any(axis=0).sum())
+        issued = len(union)
         self.counters.pages_requested += requested
         self.counters.pages_fetched += issued
         self.counters.records_fetched += issued * self.layout.n_p
+        charge_inner_reads(self.inner, union)
         return {"requested": requested, "issued": issued}
 
     def savings(self) -> int:
         return self.counters.pages_requested - self.counters.pages_fetched
+
+    def charge(self, page_ids: np.ndarray) -> None:
+        """Accounting-only reads from a layer above (shared-cache replay,
+        sharded stores): already past any coalescing decision, so they pass
+        through uncoalesced — a cache miss re-issued after eviction is a
+        genuine second device read."""
+        page_ids = np.asarray(page_ids, np.int64).reshape(-1)
+        book_charged_reads(self.counters, len(page_ids), self.layout.n_p)
+        self.inner.charge(page_ids)
 
     def kernel_arrays(self) -> tuple:
         return self.inner.kernel_arrays()
@@ -255,7 +322,10 @@ class BatchedPageStore:
 def build_store(layout, cached_vertices: Optional[np.ndarray] = None,
                 batched: bool = False, *, cache_policy: str = "none",
                 cache_bytes: int = 0, prefetch: int = 0, tenants: int = 1,
-                tenant_shares=None, rebalance_every: int = 0):
+                tenant_shares=None, rebalance_every: int = 0,
+                shards: int = 1, placement: str = "round-robin",
+                page_profile: Optional[np.ndarray] = None,
+                placement_hot_frac: float = 0.25):
     """Compose the store stack for an index. Bottom-up:
 
       ArrayPageStore                          (always — the simulated SSD)
@@ -266,6 +336,12 @@ def build_store(layout, cached_vertices: Optional[np.ndarray] = None,
                                               ("lru" | "fifo" | "2q"), sized
                                               by `cache_bytes`; `prefetch` > 0
                                               selects the look-ahead variant
+      ShardedPageStore                        shards > 1: the page space
+                                              split across S devices by
+                                              `placement` (PLACEMENTS), the
+                                              dynamic cache (if any) split
+                                              into per-shard slices of the
+                                              same `cache_bytes` budget
 
     The static vertex mask (§4.1.2) is now just one policy of the cache
     subsystem: "static-vertex" requires `cached_vertices`; passing
@@ -276,9 +352,17 @@ def build_store(layout, cached_vertices: Optional[np.ndarray] = None,
     `tenants > 1` partitions the SAME `cache_bytes` budget across tenants
     (PartitionedPageCache: static `tenant_shares` plus utility rebalance
     every `rebalance_every` accesses when set); replay callers then pass
-    per-query tenant ids so each query charges its own partition."""
+    per-query tenant ids so each query charges its own partition.
+
+    `shards > 1` replaces the single-device stateful top with a
+    `ShardedPageStore`: placement "replicated" additionally needs
+    `page_profile` (per-page access counts, `profile_from_trace`). Per-shard
+    look-ahead and tenant-partitioned shard caches are later PRs, so
+    `prefetch`/`tenants` do not compose with `shards` yet."""
     from repro.io.page_cache import (DYNAMIC_POLICIES, PrefetchingPageStore,
                                      SharedCachePageStore, make_cache)
+    from repro.io.sharded_store import (ShardedPageStore, make_placement,
+                                        make_shard_caches)
     known = ("none", "static-vertex") + DYNAMIC_POLICIES
     if cache_policy not in known:
         raise ValueError(f"unknown cache_policy {cache_policy!r}; "
@@ -299,12 +383,31 @@ def build_store(layout, cached_vertices: Optional[np.ndarray] = None,
         raise ValueError(
             f"tenants={tenants} partitions a stateful page cache — set "
             f"cache_policy to one of {DYNAMIC_POLICIES}")
+    if shards < 1:
+        raise ValueError(f"shards={shards} must be >= 1")
+    if shards > 1 and prefetch > 0:
+        raise ValueError(
+            "prefetch composes with the single-device stateful stores; "
+            "per-shard look-ahead queues are a later PR — set shards=1 or "
+            "prefetch=0")
+    if shards > 1 and tenants > 1:
+        raise ValueError(
+            "tenant-partitioned shard caches are a later PR — set shards=1 "
+            "or tenants=1")
     store = ArrayPageStore(layout)
     if cached_vertices is not None and cached_vertices.any():
         store = CachedPageStore(store, cached_vertices)
     if batched:
         store = BatchedPageStore(store)
-    if cache_policy in DYNAMIC_POLICIES:
+    if shards > 1:
+        pl = make_placement(placement, layout.num_pages, shards,
+                            profile=page_profile,
+                            hot_frac=placement_hot_frac)
+        caches = (make_shard_caches(cache_policy, cache_bytes,
+                                    layout.page_bytes, shards)
+                  if cache_policy in DYNAMIC_POLICIES else None)
+        store = ShardedPageStore(store, pl, caches)
+    elif cache_policy in DYNAMIC_POLICIES:
         cache = make_cache(cache_policy, cache_bytes, layout.page_bytes,
                            tenants=tenants, tenant_shares=tenant_shares,
                            rebalance_every=rebalance_every)

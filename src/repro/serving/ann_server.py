@@ -45,6 +45,18 @@ service overlaps compute (the device model's `prefetch_overlap` rebate).
 With the default policy the batch accounting is the order-free cross-query
 union (BatchedPageStore), exactly the pre-refactor behaviour.
 
+Distributed serving: `ServerConfig.shards > 1` splits the page space across
+S simulated devices (repro/io/sharded_store.py: ShardedPageStore behind
+`ServerConfig.placement` = "round-robin" | "contiguous" | "replicated" —
+the last needs a `page_profile` on the AnnServer constructor). Each batch's
+charged pages are split by shard, the device time is the max over per-shard
+completion times at per-shard queue depths
+(`SSDModel.concurrent_latency_us(shard_pages=, shard_depths=)`), and the
+reports carry `per_shard` rows (load share, mean queue depth, utilization,
+hit rate) plus the flattened `shards`/`shard_imbalance`/`max_shard_util`
+row columns. With a dynamic cache policy configured the same `cache_bytes`
+budget is split into per-shard caches.
+
 Multi-tenancy: `ServerConfig.tenants > 1` splits the SAME `cache_bytes`
 budget into per-tenant partitions (repro/io/page_cache.py:
 PartitionedPageCache — static `tenant_shares` + optional utility
@@ -80,7 +92,7 @@ import numpy as np
 from repro.core.device_model import SSDModel
 from repro.core.search_kernel import search_batched
 from repro.core.stats import QueryStats
-from repro.io import DYNAMIC_POLICIES, build_store
+from repro.io import DYNAMIC_POLICIES, PLACEMENTS, build_store
 from repro.serving.admission import AdmissionConfig, AdmissionController
 
 
@@ -102,6 +114,14 @@ class ServerConfig:
     tenants: int = 1                     # >1 partitions cache_bytes
     tenant_shares: Optional[Tuple[float, ...]] = None  # default: equal
     cache_rebalance_every: int = 0       # utility rebalance period (0 = off)
+    # --- distributed serving (repro/io/sharded_store.py) ---
+    shards: int = 1                      # >1 splits the page space across
+    #                                      S simulated devices
+    placement: str = "round-robin"       # "round-robin" | "contiguous" |
+    #                                      "replicated" (needs page_profile=
+    #                                      on the AnnServer constructor)
+    placement_hot_frac: float = 0.25     # replicated: page-space fraction
+    #                                      eligible for the replica hot set
 
     def __post_init__(self):
         if self.max_batch < 1:
@@ -148,6 +168,54 @@ class ServerConfig:
             raise ValueError(
                 f"cache_rebalance_every={self.cache_rebalance_every} "
                 f"must be >= 0 (0 = static shares)")
+        if self.shards < 1:
+            raise ValueError(f"shards={self.shards} must be >= 1")
+        if self.placement not in PLACEMENTS:
+            raise ValueError(
+                f"placement={self.placement!r} must be one of {PLACEMENTS}")
+        if self.shards > 1 and self.prefetch > 0:
+            raise ValueError(
+                f"shards={self.shards} does not compose with prefetch yet "
+                f"(per-shard look-ahead queues are a later PR)")
+        if self.shards > 1 and self.tenants > 1:
+            raise ValueError(
+                f"shards={self.shards} does not compose with "
+                f"tenants={self.tenants} yet (tenant-partitioned shard "
+                f"caches are a later PR)")
+        if not 0.0 < self.placement_hot_frac <= 1.0:
+            raise ValueError(
+                f"placement_hot_frac={self.placement_hot_frac} must be in "
+                f"(0, 1] (the replica-eligible fraction of the page space)")
+
+
+def _tenant_columns(per_tenant: Optional[dict]) -> dict:
+    """Flatten the per-tenant report rows into t<N>_* columns so `row()`
+    carries the multi-tenant outcome into the benchmark tables (previously
+    the dict was dropped on the way to print_table)."""
+    if not per_tenant:
+        return {}
+    out = {}
+    for t, r in sorted(per_tenant.items()):
+        for key in ("completed", "shed", "p99_latency_us",
+                    "cache_hit_rate"):
+            if key in r:
+                out[f"t{t}_{key}"] = r[key]
+    return out
+
+
+def _shard_columns(per_shard: Optional[dict]) -> dict:
+    """Per-shard summary columns: how many devices, the max/mean issued-read
+    imbalance (1.0 = perfectly balanced placement), and the peak device
+    utilization — the one-line answer to \"did the placement spread the
+    load\"."""
+    if not per_shard:
+        return {}
+    issued = [r["issued"] for r in per_shard.values()]
+    mean = sum(issued) / len(issued)
+    util = [r["utilization"] for r in per_shard.values()]
+    return {"shards": len(per_shard),
+            "shard_imbalance": round(max(issued) / mean, 4) if mean else 1.0,
+            "max_shard_util": round(max(util), 4)}
 
 
 @dataclasses.dataclass
@@ -170,9 +238,12 @@ class ServingReport:
     per_tenant: Optional[dict] = None   # {tenant: {completed, latency,
     #                                     cache_hit_rate, ...}} when the
     #                                     workload is multi-tenant
+    per_shard: Optional[dict] = None    # {shard: {issued, load_frac,
+    #                                     mean_queue_depth, utilization,
+    #                                     hit_rate}} when shards > 1
 
     def row(self) -> dict:
-        return {
+        row = {
             "workers": self.workers, "queries": self.queries,
             "qps": round(self.qps, 1),
             "mean_latency_us": round(self.mean_latency_us, 1),
@@ -182,7 +253,11 @@ class ServingReport:
             "batched_pages_per_query": round(self.batched_pages_per_query, 2),
             "dedup_saved_frac": round(self.dedup_saved_frac, 4),
             "cache_hit_rate": round(self.cache_hit_rate, 4),
+            "overlap_frac": round(self.overlap_frac, 4),
         }
+        row.update(_tenant_columns(self.per_tenant))
+        row.update(_shard_columns(self.per_shard))
+        return row
 
 
 @dataclasses.dataclass
@@ -211,9 +286,12 @@ class OpenLoopReport:
     degraded: int = 0            # queries served at a degraded level
     per_tenant: Optional[dict] = None   # {tenant: {offered, admitted, shed,
     #                                     completed, latency, hit rates}}
+    per_shard: Optional[dict] = None    # {shard: {issued, load_frac,
+    #                                     mean_queue_depth, utilization,
+    #                                     hit_rate}} when shards > 1
 
     def row(self) -> dict:
-        return {
+        row = {
             "rate_qps": round(self.rate_qps, 1),
             "offered": self.offered,
             "offered_qps": round(self.offered_qps, 1),
@@ -230,23 +308,81 @@ class OpenLoopReport:
             "overlap_frac": round(self.overlap_frac, 4),
             "slo_violation_frac": round(self.slo_violation_frac, 4),
         }
+        row.update(_tenant_columns(self.per_tenant))
+        row.update(_shard_columns(self.per_shard))
+        return row
+
+
+class _ShardWindow:
+    """Per-run per-shard aggregation: each dispatched batch adds its
+    shard-split accounting (`shard_issued`/`shard_depths` from the sharded
+    store), and `report(elapsed_us)` turns the window into the per-shard
+    rows the serving reports expose — issued-read load share, mean device
+    queue depth, and busy-time utilization (shard service time over the
+    run's elapsed virtual time)."""
+
+    def __init__(self, server: "AnnServer"):
+        self.server = server
+        self.on = server._sharded
+        if self.on:
+            S = server.server_cfg.shards
+            self.req = np.zeros(S, np.int64)
+            self.hits = np.zeros(S, np.int64)
+            self.issued = np.zeros(S, np.int64)
+            self.depth_sum = np.zeros(S, np.float64)
+            self.busy_us = np.zeros(S, np.float64)
+            self.batches = 0
+
+    def add(self, acct: dict) -> None:
+        if not self.on:
+            return
+        self.req += acct["shard_requested"]
+        self.hits += acct["shard_hits"]
+        self.issued += acct["shard_issued"]
+        self.depth_sum += np.asarray(acct["shard_depths"], np.float64)
+        # busy time in raw service units: issued x read_service_us is the
+        # device-capacity fraction consumed, independent of queueing
+        self.busy_us += acct["shard_issued"] * self.server.model.\
+            read_service_us(self.server.cfg.page_bytes)
+        self.batches += 1
+
+    def report(self, elapsed_us: float) -> Optional[dict]:
+        if not self.on or self.batches == 0:
+            return None
+        total = int(self.issued.sum())
+        return {s: {
+            "requested": int(self.req[s]),
+            "issued": int(self.issued[s]),
+            "hit_rate": (round(self.hits[s] / self.req[s], 4)
+                         if self.req[s] else 0.0),
+            "load_frac": (round(self.issued[s] / total, 4)
+                          if total else 0.0),
+            "mean_queue_depth": round(self.depth_sum[s] / self.batches, 2),
+            "utilization": (round(float(self.busy_us[s]) / elapsed_us, 4)
+                            if elapsed_us > 0 else 0.0),
+        } for s in range(len(self.issued))}
 
 
 class AnnServer:
     """Concurrent query server over a DiskIndex (closed- or open-loop)."""
 
     def __init__(self, index, cfg=None, model: Optional[SSDModel] = None,
-                 server_cfg: Optional[ServerConfig] = None):
+                 server_cfg: Optional[ServerConfig] = None,
+                 page_profile: Optional[np.ndarray] = None):
         self.index = index
         self.cfg = cfg or index.cfg
         self.model = model or SSDModel()
         self.server_cfg = server_cfg or ServerConfig()
         scfg = self.server_cfg
         # a fresh store stack with batch coalescing (and, per config, a
-        # stateful shared cache + prefetcher) on top — the server's I/O
-        # counters and cache state must not leak into the facade's stores
+        # stateful shared cache + prefetcher, or a sharded store) on top —
+        # the server's I/O counters and cache state must not leak into the
+        # facade's stores. `page_profile` (per-page access counts, see
+        # repro.io.profile_from_trace) feeds the "replicated" placement's
+        # hot-set ranking.
         use_cache = self.cfg.cache_frac > 0 and index.cached.any()
         self._stateful = scfg.cache_policy in DYNAMIC_POLICIES
+        self._sharded = scfg.shards > 1
         self.store = build_store(
             index.layout,
             cached_vertices=index.cached if use_cache else None,
@@ -255,7 +391,10 @@ class AnnServer:
             cache_bytes=scfg.cache_bytes, prefetch=scfg.prefetch,
             tenants=scfg.tenants if self._stateful else 1,
             tenant_shares=scfg.tenant_shares,
-            rebalance_every=scfg.cache_rebalance_every)
+            rebalance_every=scfg.cache_rebalance_every,
+            shards=scfg.shards, placement=scfg.placement,
+            page_profile=page_profile,
+            placement_hot_frac=scfg.placement_hot_frac)
         self._degraded_cfgs = {}    # degrade level -> SearchConfig
 
     # -- batch executor ------------------------------------------------------
@@ -325,8 +464,8 @@ class AnnServer:
             return {}
         rows = {t: {"cache_hit_rate": round(r, 4)}
                 for t, r in self.store.tenant_hit_rates().items()}
-        cache = self.store.cache
-        if getattr(cache, "tenant_aware", False):
+        cache = getattr(self.store, "cache", None)   # sharded stores keep
+        if getattr(cache, "tenant_aware", False):    # per-shard caches
             for t, cap in enumerate(cache.capacities()):
                 rows.setdefault(t, {})["cache_pages"] = cap
         return rows
@@ -356,7 +495,11 @@ class AnnServer:
         queue depth, plus the batch's I/O accounting dict. With a stateful
         policy the accounting is a trace replay against the shared cache
         (misses charged, hits free, prefetches overlapped); otherwise it is
-        the order-free cross-query union of BatchedPageStore."""
+        the order-free cross-query union of BatchedPageStore. A sharded
+        store additionally splits each query's charged pages by shard
+        (trace replay against the per-shard caches, or the per-shard
+        union), and the device time becomes the max over per-shard
+        completion times at per-shard queue depths."""
         if self._stateful:
             acct = self.store.replay_batch(stats.page_trace,
                                            tenants=stats.tenants)
@@ -381,7 +524,9 @@ class AnnServer:
             mem_evals=stats.mem_evals.astype(np.float64),
             d=d, pq_m=self.cfg.pq_m, page_bytes=self.cfg.page_bytes,
             pipeline=self.cfg.pipeline, page_dedup=dedup,
-            prefetch_overlap=overlap)
+            prefetch_overlap=overlap,
+            shard_pages=acct.get("per_query_shard_pages"),
+            shard_depths=acct.get("shard_depths"))
         return np.asarray(lat, np.float64), acct
 
     # -- closed loop ---------------------------------------------------------
@@ -420,6 +565,7 @@ class AnnServer:
         service_out, batch_sizes, tenant_out = [], [], []
         requested_total = issued_total = hits_total = 0
         overlap_w = 0.0
+        shard_win = _ShardWindow(self)
         t_end = 0.0
 
         while events:
@@ -451,6 +597,7 @@ class AnnServer:
             issued_total += acct["issued"]
             hits_total += acct["hits"]
             overlap_w += acct["overlap_frac"] * acct["issued"]
+            shard_win.add(acct)
             done = dispatch + lat
             exec_free = dispatch + float(lat.max())
             t_end = max(t_end, exec_free)
@@ -485,7 +632,8 @@ class AnnServer:
                             if requested_total else 0.0),
             overlap_frac=(overlap_w / issued_total if issued_total else 0.0),
             per_tenant=(self._per_tenant_report(tenant_out, lat_arr)
-                        if multi_tenant else None))
+                        if multi_tenant else None),
+            per_shard=shard_win.report(t_end))
 
     # -- open loop -----------------------------------------------------------
 
@@ -584,6 +732,7 @@ class AnnServer:
         qidx_out, tenant_out = [], []
         requested_total = issued_total = hits_total = 0
         overlap_w = 0.0
+        shard_win = _ShardWindow(self)
         degraded_n = 0
         t_end = 0.0
         i = 0
@@ -629,6 +778,7 @@ class AnnServer:
             issued_total += acct["issued"]
             hits_total += acct["hits"]
             overlap_w += acct["overlap_frac"] * acct["issued"]
+            shard_win.add(acct)
             if level > 0:
                 degraded_n += len(batch)
             done = dispatch + lat
@@ -672,4 +822,4 @@ class AnnServer:
             query_indices=np.asarray(qidx_out, np.int64),
             offered_qps=n / (duration_us * 1e-6),
             admitted=ac.admitted, shed=ac.shed, degraded=degraded_n,
-            per_tenant=per_tenant)
+            per_tenant=per_tenant, per_shard=shard_win.report(t_end))

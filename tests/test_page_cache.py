@@ -248,6 +248,104 @@ def test_build_store_surface_validation(tiny_layout):
         build_store(tiny_layout, cache_policy="lru", cache_bytes=0)
 
 
+# --- bugfix: replay_batch forwards the misses' charge to the inner store ---
+
+
+def test_replay_batch_charges_inner_store(tiny_layout):
+    """Regression: replay booked issued reads only in its own counters, so
+    ArrayPageStore/BatchedPageStore stayed at zero under stateful policies
+    and cross-stack rollups disagreed with the top of the stack."""
+    inner = BatchedPageStore(ArrayPageStore(tiny_layout))
+    store = SharedCachePageStore(inner, LRUPageCache(4))
+    acct = store.replay_batch(_trace([0, 1], [2, 3], [0, 1]))
+    assert acct["issued"] == 4 and acct["hits"] == 2
+    # conservation: every layer saw exactly the issued reads
+    assert store.counters.pages_fetched == 4
+    assert inner.counters.pages_fetched == 4
+    assert inner.inner.counters.pages_fetched == 4
+    assert inner.inner.counters.records_fetched == 4 * tiny_layout.n_p
+
+
+def test_replay_eviction_remiss_is_charged_twice_downstream(tiny_layout):
+    """A page evicted and missed again IS two device reads; the coalescing
+    inner store must not dedup the genuine re-read."""
+    inner = BatchedPageStore(ArrayPageStore(tiny_layout))
+    store = SharedCachePageStore(inner, LRUPageCache(2))
+    acct = store.replay_batch(_trace([0, 1], [2], [0]))   # 2 evicts 0; 0 again
+    assert acct["issued"] == 4                            # page 0 twice
+    assert inner.counters.pages_fetched == 4
+    assert inner.inner.counters.pages_fetched == 4
+
+
+# --- bugfix: look-ahead admits without demand accounting -------------------
+
+
+def test_admit_does_not_move_partition_demand_stats():
+    c = PartitionedPageCache(8, 2, rebalance_every=4)
+    c.admit(0, 0)
+    c.admit(1, 1)
+    assert c.t_accesses == [0, 0] and c.t_hits == [0, 0]
+    assert c._since == 0 and all(len(sh) == 0 for sh in c._shadow)
+    # the pages ARE resident (that is admit's whole job)
+    assert c.access(0, 0) and c.access(1, 1)
+    assert c.t_accesses == [1, 1] and c.t_hits == [1, 1]
+
+
+def test_prefetch_rebalance_decisions_match_pure_cache(tiny_layout):
+    """Bugfix acceptance: look-ahead used the demand access(page, tenant)
+    path, inflating t_accesses/t_hits and the shadow-gain window — with the
+    non-demand admit path, rebalance decisions (capacity moves, rebalance
+    count, demand access totals) are identical with and without prefetch on
+    a fixed trace."""
+    def batch():
+        # query 0 / tenant 0: multi-hop over a resident working set (the
+        # prefetchable traffic); query 1 / tenant 1: single-hop cycling a
+        # set larger than its partition (the gain-accruing traffic that
+        # look-ahead cannot touch)
+        t0 = _trace([0, 1], [2, 3], [4, 5])[0]
+        return t0
+
+    def run(store):
+        cyc = 0
+        for _ in range(10):
+            t0 = batch()
+            t1 = np.full_like(t0, -1)
+            t1[0, :2] = [6 + cyc % 10, 6 + (cyc + 1) % 10]
+            cyc += 2
+            store.replay_batch(np.stack([t0, t1]), tenants=[0, 1])
+        return store.cache
+
+    mk = lambda: PartitionedPageCache(16, 2, rebalance_every=20,
+                                      rebalance_step=2)
+    pure = run(SharedCachePageStore(ArrayPageStore(tiny_layout), mk()))
+    pf = run(PrefetchingPageStore(ArrayPageStore(tiny_layout), mk(),
+                                  lookahead=1))
+    # demand accounting is prefetch-blind: same accesses, same windows
+    assert pf.t_accesses == pure.t_accesses
+    assert pf.rebalances == pure.rebalances > 0
+    assert pf.capacities() == pure.capacities()
+    # the rebalance moved capacity toward the gaining tenant in both
+    assert pure.capacities()[1] > 8
+
+
+# --- bugfix: make_cache names the byte budget in the tenant-floor error ----
+
+
+def test_make_cache_tenant_floor_error_names_bytes(tiny_layout):
+    with pytest.raises(ValueError, match=r"cache_bytes=4096 is only 1 "
+                                         r"page\(s\) of 4096 bytes"):
+        make_cache("lru", 4096, 4096, tenants=3)
+    with pytest.raises(ValueError, match="need cache_bytes >= 12288"):
+        make_cache("lru", 4096, 4096, tenants=3)
+    # build_store surfaces the same byte-level message
+    with pytest.raises(ValueError, match="1-page floor"):
+        build_store(tiny_layout, cache_policy="lru",
+                    cache_bytes=2 * tiny_layout.page_bytes, tenants=3)
+    # the floor passes exactly at tenants * page_bytes
+    c = make_cache("lru", 3 * 4096, 4096, tenants=3)
+    assert c.capacities() == [1, 1, 1]
+
+
 # --- satellite: BatchedPageStore mirrors the full counter movement ---------
 
 

@@ -132,6 +132,13 @@ def test_closed_loop_rejects_bad_workers_and_rounds(base_index,
     (dict(prefetch=-1), "prefetch=-1"),
     (dict(prefetch=1), "prefetch needs a cache_policy"),
     (dict(slo_p99_us=0.0), "slo_p99_us=0.0"),
+    (dict(shards=0), "shards=0"),
+    (dict(placement="hash"), "placement='hash'"),
+    (dict(shards=2, cache_policy="lru", cache_bytes=1 << 20, prefetch=1),
+     "does not compose with prefetch"),
+    (dict(shards=2, tenants=2, cache_policy="lru", cache_bytes=1 << 20),
+     "does not compose with"),
+    (dict(placement_hot_frac=0.0), "placement_hot_frac=0.0"),
 ])
 def test_server_config_rejects_invalid(kw, msg):
     with pytest.raises(ValueError, match=msg):
@@ -273,6 +280,127 @@ def test_open_loop_prefetch_overlap_cuts_latency(base_index, small_dataset):
     assert rep_pf.overlap_frac > 0.0 == rep_pure.overlap_frac
     assert rep_pf.mean_latency_us <= rep_pure.mean_latency_us * 1.001
     assert rep_pf.offered == rep_pure.offered
+
+
+@pytest.mark.fast
+def test_serving_report_row_carries_overlap_tenant_and_shard_columns():
+    """Doc/report satellite: row() used to drop overlap_frac and the whole
+    per-tenant dict on the way into print_table."""
+    from repro.core import QueryStats
+    zi = np.zeros(0, np.int64)
+    zf = np.zeros(0, np.float64)
+    stats = QueryStats(ids=np.zeros((0, 10), np.int64),
+                       dists=np.zeros((0, 10)), hops=zi, page_reads=zf,
+                       cache_hits=zf, n_read_records=zf, n_eff=zf,
+                       full_evals=zf, pq_evals=zf, mem_hops=zi, mem_evals=zi)
+    from repro.serving import ServingReport
+    rep = ServingReport(
+        workers=2, queries=4, elapsed_us=100.0, qps=1.0,
+        mean_latency_us=1.0, p99_latency_us=2.0, mean_service_us=1.0,
+        mean_batch_size=2.0, pages_per_query=3.0,
+        batched_pages_per_query=2.0, dedup_saved_frac=0.5, stats=stats,
+        query_indices=zi, overlap_frac=0.25,
+        per_tenant={0: {"completed": 3, "p99_latency_us": 9.0,
+                        "cache_hit_rate": 0.5},
+                    1: {"completed": 1, "shed": 2}},
+        per_shard={0: {"issued": 30, "utilization": 0.4},
+                   1: {"issued": 10, "utilization": 0.1}})
+    row = rep.row()
+    assert row["overlap_frac"] == 0.25
+    assert row["t0_completed"] == 3 and row["t0_cache_hit_rate"] == 0.5
+    assert row["t1_shed"] == 2
+    assert row["shards"] == 2
+    assert row["shard_imbalance"] == pytest.approx(30 / 20)
+    assert row["max_shard_util"] == 0.4
+
+
+# --- sharded serving (tentpole) --------------------------------------------
+
+
+def _sharded_server(idx, cfg, shards, placement="round-robin", policy="none",
+                    pages=0, max_batch=8, page_profile=None):
+    return AnnServer(idx, cfg, server_cfg=ServerConfig(
+        max_batch=max_batch, shards=shards, placement=placement,
+        cache_policy=policy,
+        cache_bytes=pages * idx.layout.page_bytes), page_profile=page_profile)
+
+
+def test_sharded_server_results_match_facade(base_index, small_dataset):
+    """Sharding only changes WHERE reads are charged, never what a query
+    returns: the golden facade contract holds through the sharded store."""
+    cfg = get_preset("baseline", L=32)
+    srv = _sharded_server(base_index, cfg, shards=4)
+    rep = srv.serve_closed_loop(small_dataset.queries, workers=8, rounds=2)
+    want = base_index.search(small_dataset.queries, cfg)
+    np.testing.assert_array_equal(rep.stats.ids,
+                                  want.ids[rep.query_indices])
+    np.testing.assert_array_equal(rep.stats.page_reads,
+                                  want.page_reads[rep.query_indices])
+
+
+def test_sharded_latency_improves_with_shards(base_index, small_dataset):
+    """More devices -> each query's pages split across parallel shards ->
+    mean service latency strictly improves 1 -> 4 shards, and the per-shard
+    report carries the split."""
+    cfg = get_preset("baseline", L=32)
+    lats, reps = [], {}
+    for shards in (1, 2, 4):
+        srv = _sharded_server(base_index, cfg, shards=shards)
+        rep = srv.serve_closed_loop(small_dataset.queries, workers=8,
+                                    rounds=1)
+        lats.append(rep.mean_latency_us)
+        reps[shards] = rep
+    assert lats[0] > lats[1] > lats[2], lats
+    assert reps[1].per_shard is None
+    per = reps[4].per_shard
+    assert set(per) == {0, 1, 2, 3}
+    assert sum(r["load_frac"] for r in per.values()) == pytest.approx(1.0)
+    row = reps[4].row()
+    assert row["shards"] == 4 and row["shard_imbalance"] >= 1.0
+    assert "overlap_frac" in row
+
+
+def test_sharded_open_loop_with_per_shard_caches(base_index, small_dataset):
+    """Sharding composes with the stateful cache subsystem: per-shard LRU
+    slices of one budget produce hits, per-shard hit rates, and the same
+    query results."""
+    cfg = get_preset("baseline", L=16)
+    srv = _sharded_server(base_index, cfg, shards=4, policy="lru",
+                          pages=base_index.layout.num_pages)
+    rep = srv.serve_open_loop(small_dataset.queries, rate_qps=4000.0,
+                              duration_us=10000.0, seed=7)
+    assert rep.completed == rep.offered
+    assert rep.cache_hit_rate > 0.0
+    assert rep.per_shard is not None
+    assert any(r["hit_rate"] > 0 for r in rep.per_shard.values())
+    want = base_index.search(small_dataset.queries, cfg)
+    np.testing.assert_array_equal(rep.stats.ids, want.ids[rep.query_indices])
+
+
+def test_replicated_placement_balances_skewed_load(base_index,
+                                                   small_dataset):
+    """A skewed pool (few hot queries dominating) under 4 shards: the
+    replicated hot set routes hot pages to the least-loaded device, so the
+    issued-read imbalance is no worse than round-robin's and latency does
+    not regress."""
+    from repro.core.search_kernel import search_batched
+    from repro.io import build_store, profile_from_trace
+    cfg = get_preset("baseline", L=32)
+    pool = np.concatenate([np.tile(small_dataset.queries[:4], (8, 1)),
+                           small_dataset.queries])
+    store = build_store(base_index.layout, batched=True)
+    st = search_batched(store, base_index.pq, cfg, pool,
+                        medoid=base_index.medoid,
+                        memgraph=base_index.memgraph, collect_trace=True,
+                        account_kernel_io=False)
+    prof = profile_from_trace(st.page_trace, base_index.layout.num_pages)
+    kw = dict(rate_qps=8000.0, duration_us=20000.0, seed=3)
+    rr = _sharded_server(base_index, cfg, shards=4).serve_open_loop(
+        pool, **kw)
+    rep = _sharded_server(base_index, cfg, shards=4, placement="replicated",
+                          page_profile=prof).serve_open_loop(pool, **kw)
+    assert rep.row()["shard_imbalance"] <= rr.row()["shard_imbalance"]
+    assert rep.mean_latency_us <= rr.mean_latency_us * 1.001
 
 
 def test_open_loop_validates_arguments(base_index, small_dataset):
