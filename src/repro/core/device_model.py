@@ -47,6 +47,11 @@ class SSDModel:
     # compute (per-worker core): ns per float op in distance kernels
     ns_per_dim_full: float = 0.8    # SIMD L2 per dimension
     ns_per_sub_adc: float = 1.2     # ADC table lookup per subspace
+    # writes (streaming updates: flush/compaction rewrites): the paper only
+    # measures the read path, so the write service time is modeled as a
+    # multiple of the read service — NVMe steady-state random-write
+    # throughput runs well below read throughput once the FTL is folding
+    write_penalty: float = 2.0
 
     def _rates(self, page_bytes: int) -> tuple:
         """(IOPS, bandwidth) at this page size; 8K interpolates between the
@@ -65,6 +70,13 @@ class SSDModel:
         the fraction of the device's saturation capacity actually used."""
         iops, bw = self._rates(page_bytes)
         return max(1.0 / iops, page_bytes / bw) * 1e6
+
+    def write_service_us(self, page_bytes: int) -> float:
+        """Raw device service time of ONE page rewrite (streaming updates:
+        append flushes and compaction re-packs) — the read unit scaled by
+        `write_penalty`. Background update I/O priced in this unit shares
+        the device with query reads, so compaction visibly taxes serving."""
+        return self.read_service_us(page_bytes) * self.write_penalty
 
     def page_service_us(self, page_bytes: int) -> float:
         """Mean device service time per page at saturation, amortized

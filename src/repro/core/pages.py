@@ -81,12 +81,24 @@ def build_layout(vectors: np.ndarray, graph: np.ndarray, *,
                       mapping_bytes=mapping)
 
 
-def overlap_ratio(layout: PageLayout, graph: np.ndarray) -> float:
-    """OR(G) (§3.1): average over u of |B(u) ∩ N(u)| / (n_p - 1)."""
+def overlap_ratio(layout: PageLayout, graph: np.ndarray,
+                  alive: Optional[np.ndarray] = None) -> float:
+    """OR(G) (§3.1): average over u of |B(u) ∩ N(u)| / (n_p - 1).
+
+    `alive` (optional (n,) bool) restricts the average to live vertices —
+    the form the streaming-mutation subsystem needs, where the vid space
+    carries capacity padding and tombstoned entries that must not dilute
+    the locality signal."""
     if layout.n_p <= 1:
         return 0.0
     n = graph.shape[0]
     pages_of_nbrs = np.where(graph >= 0, layout.vid2page[np.maximum(graph, 0)], -2)
     own = layout.vid2page[np.arange(n)][:, None]
     co = (pages_of_nbrs == own).sum(1)
-    return float((co / (layout.n_p - 1)).mean())
+    frac = co / (layout.n_p - 1)
+    if alive is not None:
+        alive = np.asarray(alive, bool)
+        if not alive.any():
+            return 0.0
+        frac = frac[alive]
+    return float(frac.mean())

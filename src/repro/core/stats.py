@@ -83,14 +83,35 @@ class QueryStats:
 
     @classmethod
     def concat(cls, parts: List["QueryStats"]) -> "QueryStats":
-        """Concatenate per-batch stats along the query axis."""
+        """Concatenate per-batch stats along the query axis.
+
+        `visited_pages` widths may differ across batches when the page
+        space GROWS mid-run (streaming updates append pages): earlier
+        bitmaps are padded with False — a page that did not exist cannot
+        have been charged. `page_trace` rows are -1-padded likewise (its
+        width follows the beam, which degrade levels shrink)."""
         if len(parts) == 1:
             return parts[0]
         kw = {}
         for f in cls._KERNEL_KEYS:
             vals = [getattr(p, f) for p in parts]
-            kw[f] = (np.concatenate(vals)
-                     if all(v is not None for v in vals) else None)
+            if any(v is None for v in vals):
+                kw[f] = None
+                continue
+            if f == "visited_pages":
+                w = max(v.shape[1] for v in vals)
+                vals = [v if v.shape[1] == w else
+                        np.pad(v, ((0, 0), (0, w - v.shape[1])))
+                        for v in vals]
+            elif f == "page_trace":
+                h = max(v.shape[1] for v in vals)
+                w = max(v.shape[2] for v in vals)
+                vals = [v if v.shape[1:] == (h, w) else
+                        np.pad(v, ((0, 0), (0, h - v.shape[1]),
+                                   (0, w - v.shape[2])),
+                               constant_values=-1)
+                        for v in vals]
+            kw[f] = np.concatenate(vals)
         return cls(**kw)
 
     def take(self, n: int) -> "QueryStats":

@@ -104,6 +104,13 @@ class PageCache:
         self.capacity = int(capacity_pages)
         self._shrink_to_capacity()
 
+    def invalidate(self, page: int) -> bool:
+        """Drop a (possibly) resident page because its on-disk bytes were
+        rewritten (streaming updates: flush/compaction). Returns whether a
+        stale copy was actually evicted. NOT a policy eviction: residency
+        simply ends, and the next demand access is a charged miss."""
+        raise NotImplementedError
+
     def _shrink_to_capacity(self) -> None:
         """Evict, per policy, until residency fits the (new) capacity."""
         raise NotImplementedError
@@ -130,6 +137,12 @@ class _QueueCache(PageCache):
     def _shrink_to_capacity(self) -> None:
         while len(self._q) > self.capacity:
             self._q.popitem(last=False)
+
+    def invalidate(self, page: int) -> bool:
+        if page in self._q:
+            del self._q[page]
+            return True
+        return False
 
     def __contains__(self, page: int) -> bool:
         return page in self._q
@@ -225,6 +238,19 @@ class TwoQPageCache(PageCache):
             self._am.popitem(last=False)
         while len(self._ghost) > self._ghost_cap:
             self._ghost.popitem(last=False)
+
+    def invalidate(self, page: int) -> bool:
+        """Evict stale BYTES (probation or protected residency). The ghost
+        queue keeps its id-only entry: invalidation rewrites the page's
+        content, not the evidence that the page is re-used."""
+        hit = False
+        if page in self._a1in:
+            del self._a1in[page]
+            hit = True
+        if page in self._am:
+            del self._am[page]
+            hit = True
+        return hit
 
     def __contains__(self, page: int) -> bool:
         return page in self._a1in or page in self._am
@@ -366,6 +392,18 @@ class PartitionedPageCache(PageCache):
                     self.parts[recipient].capacity + step)
                 self.rebalances += 1
         self._gain = [0] * self.tenants
+
+    def invalidate(self, page: int) -> bool:
+        """Drop stale copies from EVERY tenant's partition (a page hot for
+        two tenants is resident twice) and from the shadow LRUs — a shadow
+        entry for rewritten bytes would otherwise count a would-have-hit
+        that could never have served the new content."""
+        hit = False
+        for p in self.parts:
+            hit = p.invalidate(page) or hit
+        for sh in self._shadow:
+            sh.pop(page, None)
+        return hit
 
     def capacities(self) -> List[int]:
         """Current per-tenant page capacities (moves under rebalance)."""

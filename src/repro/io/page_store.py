@@ -43,12 +43,16 @@ class StoreCounters:
     pages_fetched: int = 0     # pages actually charged to the device
     cache_hits: int = 0        # requests served from memory
     records_fetched: int = 0   # records moved (pages_fetched * n_p)
+    pages_written: int = 0     # pages rewritten in place (streaming updates:
+    #                            flush/compaction traffic, booked by the
+    #                            MutablePageStore layer only)
 
     def reset(self) -> None:
         self.pages_requested = 0
         self.pages_fetched = 0
         self.cache_hits = 0
         self.records_fetched = 0
+        self.pages_written = 0
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -325,7 +329,7 @@ def build_store(layout, cached_vertices: Optional[np.ndarray] = None,
                 tenant_shares=None, rebalance_every: int = 0,
                 shards: int = 1, placement: str = "round-robin",
                 page_profile: Optional[np.ndarray] = None,
-                placement_hot_frac: float = 0.25):
+                placement_hot_frac: float = 0.25, mutable: bool = False):
     """Compose the store stack for an index. Bottom-up:
 
       ArrayPageStore                          (always — the simulated SSD)
@@ -358,7 +362,16 @@ def build_store(layout, cached_vertices: Optional[np.ndarray] = None,
     `ShardedPageStore`: placement "replicated" additionally needs
     `page_profile` (per-page access counts, `profile_from_trace`). Per-shard
     look-ahead and tenant-partitioned shard caches are later PRs, so
-    `prefetch`/`tenants` do not compose with `shards` yet."""
+    `prefetch`/`tenants` do not compose with `shards` yet.
+
+    `mutable=True` wraps the finished stack in a `MutablePageStore`
+    (repro/mutation/mutable_store.py): page-version tracking plus cache
+    invalidation on rewrite, the store-side half of the streaming-update
+    subsystem. Every knob that only configures a subordinate layer is
+    validated here: a silently ignored `cache_bytes`/`tenant_shares`/
+    `rebalance_every`/`placement` is an accounting bug waiting to be
+    measured, so unsupported compositions raise one error naming the
+    combination instead."""
     from repro.io.page_cache import (DYNAMIC_POLICIES, PrefetchingPageStore,
                                      SharedCachePageStore, make_cache)
     from repro.io.sharded_store import (ShardedPageStore, make_placement,
@@ -371,6 +384,12 @@ def build_store(layout, cached_vertices: Optional[np.ndarray] = None,
         raise ValueError(
             "cache_policy='static-vertex' needs `cached_vertices` (the "
             "vertex mask IS the policy's state)")
+    if cache_bytes > 0 and cache_policy not in DYNAMIC_POLICIES:
+        raise ValueError(
+            f"cache_bytes={cache_bytes} with cache_policy="
+            f"{cache_policy!r} configures no store: a byte budget only "
+            f"sizes the stateful policies {DYNAMIC_POLICIES} — set one, or "
+            f"drop cache_bytes")
     if prefetch < 0:
         raise ValueError(f"prefetch={prefetch} must be >= 0")
     if prefetch and cache_policy not in DYNAMIC_POLICIES:
@@ -379,6 +398,20 @@ def build_store(layout, cached_vertices: Optional[np.ndarray] = None,
             f"{DYNAMIC_POLICIES} to hold the looked-ahead pages")
     if tenants < 1:
         raise ValueError(f"tenants={tenants} must be >= 1")
+    if tenants == 1 and tenant_shares is not None:
+        raise ValueError(
+            "tenant_shares with tenants=1 splits nothing — one tenant owns "
+            "the whole budget; set tenants > 1 or drop tenant_shares")
+    if tenants == 1 and rebalance_every:
+        raise ValueError(
+            f"rebalance_every={rebalance_every} with tenants=1 has no "
+            f"partitions to rebalance — set tenants > 1 or drop "
+            f"rebalance_every")
+    if shards == 1 and placement != "round-robin":
+        raise ValueError(
+            f"placement={placement!r} with shards=1 places nothing — a "
+            f"single device has no placement decision; set shards > 1 or "
+            f"leave placement at its default")
     if tenants > 1 and cache_policy not in DYNAMIC_POLICIES:
         raise ValueError(
             f"tenants={tenants} partitions a stateful page cache — set "
@@ -413,4 +446,7 @@ def build_store(layout, cached_vertices: Optional[np.ndarray] = None,
                            rebalance_every=rebalance_every)
         store = (PrefetchingPageStore(store, cache, lookahead=prefetch)
                  if prefetch > 0 else SharedCachePageStore(store, cache))
+    if mutable:
+        from repro.mutation.mutable_store import MutablePageStore
+        store = MutablePageStore(store)
     return store

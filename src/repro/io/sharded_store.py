@@ -83,6 +83,28 @@ class Placement:
                 "pages_per_shard": counts.tolist(),
                 "replicated_pages": int(self.replicated.sum())}
 
+    def extend(self, num_pages: int) -> "Placement":
+        """Placement for a GROWN page space (streaming updates append
+        pages): existing homes are kept, appended pages are assigned
+        round-robin starting from the currently lightest shard (whatever
+        the base policy — the append zone has no profile to place by), and
+        none are replicated. Returns a new Placement; the original is
+        frozen."""
+        old = len(self.page_to_shard)
+        if num_pages < old:
+            raise ValueError(
+                f"cannot shrink a placement: {num_pages} < {old} pages")
+        if num_pages == old:
+            return self
+        counts = np.bincount(self.page_to_shard, minlength=self.shards)
+        start = int(np.argmin(counts))
+        extra = (start + np.arange(num_pages - old)) % self.shards
+        return dataclasses.replace(
+            self,
+            page_to_shard=np.concatenate([self.page_to_shard, extra]),
+            replicated=np.concatenate(
+                [self.replicated, np.zeros(num_pages - old, bool)]))
+
 
 def profile_from_trace(page_trace: np.ndarray, num_pages: int) -> np.ndarray:
     """Per-page access counts from a (B, hops, w) `page_trace` (-1 padded)
@@ -102,7 +124,13 @@ def make_placement(policy: str, num_pages: int, shards: int, *,
     """Build a placement. `replicated` needs a per-page access `profile`
     (see `profile_from_trace`); the hot set is the top `hot_pages` pages by
     count (default: `hot_frac` of the page space), restricted to pages the
-    profile actually saw."""
+    profile actually saw.
+
+    A missing profile is an ERROR here, deliberately: a caller composing a
+    store by hand configured "replicated" on purpose and must supply the
+    data it ranks by. The serving layer, where a `page_profile=None`
+    default can legitimately flow in, instead falls back to round-robin
+    with an explicit warning (AnnServer.__init__) — never silently."""
     if shards < 1:
         raise ValueError(f"shards={shards} must be >= 1")
     if num_pages < 1:
@@ -416,3 +444,8 @@ class ShardedPageStore:
         if self.caches is not None:
             for c in self.caches:
                 c.reset()
+
+    def extend_placement(self, num_pages: int) -> None:
+        """Grow the page→shard map for an appended page space (streaming
+        updates); see Placement.extend."""
+        self.placement = self.placement.extend(num_pages)

@@ -1,0 +1,11 @@
+"""Streaming index mutations: delta graph, tombstones, page versioning,
+and background compaction (see docs in each module and ARCHITECTURE.md)."""
+from repro.mutation.compactor import (COMPACTION_POLICIES, Compactor,
+                                      MutationMix)
+from repro.mutation.delta_index import DeltaIndex
+from repro.mutation.mutable_index import MutableIndex, MutationConfig
+from repro.mutation.mutable_store import MutablePageStore
+
+__all__ = ["COMPACTION_POLICIES", "Compactor", "DeltaIndex",
+           "MutableIndex", "MutablePageStore", "MutationConfig",
+           "MutationMix"]

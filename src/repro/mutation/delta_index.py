@@ -1,0 +1,106 @@
+"""Streaming-update memory tier: the delta index over fresh inserts.
+
+FreshDiskANN-style staging: an inserted vector is NOT written to the disk
+layout at insert time — it lands in this in-memory delta, is searched
+exactly (bruteforce over at most `flush_threshold` vectors) alongside every
+disk search, and only reaches pages when the mutable index flushes the
+backlog. Until then the disk graph carries no edge to it, so the kernel
+never sees a vid beyond the layout and the golden facade stays
+bit-identical while the delta is empty.
+
+The bruteforce cost is REAL and charged: `search` reports the number of
+full-precision distance evaluations it performed per query, which the
+mutable index folds into `QueryStats.mem_evals` — the device model then
+prices delta scans exactly like any other in-memory distance work, so a
+lazily-flushed fat delta visibly taxes every query's latency. (A mini-graph
+over the delta is the natural upgrade once deltas outgrow bruteforce; at
+`flush_threshold`-bounded sizes the scan is the honest baseline.)
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+INF = np.float32(np.inf)
+
+
+class DeltaIndex:
+    """Exact in-memory index over vectors inserted since the last flush."""
+
+    def __init__(self, d: int):
+        self.d = int(d)
+        self._vecs: List[np.ndarray] = []
+        self._vids: List[int] = []
+        self._pos: Dict[int, int] = {}   # vid -> slot in the lists
+
+    def __len__(self) -> int:
+        return len(self._vids)
+
+    def __contains__(self, vid: int) -> bool:
+        return int(vid) in self._pos
+
+    def insert(self, vid: int, vec: np.ndarray) -> None:
+        vec = np.asarray(vec, np.float32).reshape(-1)
+        if vec.shape[0] != self.d:
+            raise ValueError(f"vector has dim {vec.shape[0]}, delta holds "
+                             f"dim {self.d}")
+        vid = int(vid)
+        if vid in self._pos:
+            raise ValueError(f"vid {vid} already in the delta")
+        self._pos[vid] = len(self._vids)
+        self._vids.append(vid)
+        self._vecs.append(vec)
+
+    def remove(self, vid: int) -> bool:
+        """Delete-before-flush: the vector never existed on disk, so the
+        tombstone resolves entirely in memory (swap-remove)."""
+        vid = int(vid)
+        pos = self._pos.pop(vid, None)
+        if pos is None:
+            return False
+        last = len(self._vids) - 1
+        if pos != last:
+            self._vids[pos] = self._vids[last]
+            self._vecs[pos] = self._vecs[last]
+            self._pos[self._vids[pos]] = pos
+        self._vids.pop()
+        self._vecs.pop()
+        return True
+
+    def drain(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Hand the backlog to a flush: (vids (m,), vecs (m, d)) in
+        insertion order, clearing the delta."""
+        if not self._vids:
+            return (np.zeros(0, np.int64), np.zeros((0, self.d), np.float32))
+        order = np.argsort(np.asarray(self._vids, np.int64), kind="stable")
+        vids = np.asarray(self._vids, np.int64)[order]
+        vecs = np.stack(self._vecs)[order].astype(np.float32)
+        self._vids.clear()
+        self._vecs.clear()
+        self._pos.clear()
+        return vids, vecs
+
+    def search(self, queries: np.ndarray,
+               k: int) -> Tuple[np.ndarray, np.ndarray, int]:
+        """Exact top-k over the delta for each query. Returns
+        (ids (B, k) int64 with -1 padding, dists (B, k) float32 with +inf
+        padding, evals_per_query) — squared L2, matching the kernel's
+        distance space so the merged heap compares like with like."""
+        queries = np.asarray(queries, np.float32)
+        B = queries.shape[0]
+        m = len(self._vids)
+        ids = np.full((B, k), -1, np.int64)
+        dists = np.full((B, k), INF, np.float32)
+        if m == 0:
+            return ids, dists, 0
+        X = np.stack(self._vecs).astype(np.float32)           # (m, d)
+        d2 = (np.sum(np.square(queries), 1)[:, None]
+              - 2.0 * queries @ X.T + np.sum(np.square(X), 1)[None, :])
+        d2 = np.maximum(d2, 0.0).astype(np.float32)
+        take = min(k, m)
+        order = np.argsort(d2, axis=1, kind="stable")[:, :take]
+        vids = np.asarray(self._vids, np.int64)
+        ids[:, :take] = vids[order]
+        dists[:, :take] = np.take_along_axis(d2, order, axis=1)
+        return ids, dists, m

@@ -85,6 +85,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import warnings
 from typing import List, Optional, Tuple
 
 import numpy as np
@@ -93,6 +94,7 @@ from repro.core.device_model import SSDModel
 from repro.core.search_kernel import search_batched
 from repro.core.stats import QueryStats
 from repro.io import DYNAMIC_POLICIES, PLACEMENTS, build_store
+from repro.mutation import Compactor, MutableIndex, MutationMix
 from repro.serving.admission import AdmissionConfig, AdmissionController
 
 
@@ -141,6 +143,11 @@ class ServerConfig:
         if self.cache_policy != "none" and self.cache_bytes <= 0:
             raise ValueError(
                 f"cache_policy={self.cache_policy!r} needs cache_bytes > 0")
+        if self.cache_policy == "none" and self.cache_bytes > 0:
+            raise ValueError(
+                f"cache_bytes={self.cache_bytes} with cache_policy='none' "
+                f"configures no cache — set cache_policy to one of "
+                f"{DYNAMIC_POLICIES}, or drop cache_bytes")
         if self.prefetch < 0:
             raise ValueError(f"prefetch={self.prefetch} must be >= 0")
         if self.prefetch > 0 and self.cache_policy == "none":
@@ -168,11 +175,21 @@ class ServerConfig:
             raise ValueError(
                 f"cache_rebalance_every={self.cache_rebalance_every} "
                 f"must be >= 0 (0 = static shares)")
+        if self.cache_rebalance_every > 0 and self.tenants == 1:
+            raise ValueError(
+                f"cache_rebalance_every={self.cache_rebalance_every} with "
+                f"tenants=1 has no partitions to rebalance — set tenants "
+                f"> 1 or drop cache_rebalance_every")
         if self.shards < 1:
             raise ValueError(f"shards={self.shards} must be >= 1")
         if self.placement not in PLACEMENTS:
             raise ValueError(
                 f"placement={self.placement!r} must be one of {PLACEMENTS}")
+        if self.shards == 1 and self.placement != "round-robin":
+            raise ValueError(
+                f"placement={self.placement!r} with shards=1 places "
+                f"nothing — a single device has no placement decision; "
+                f"set shards > 1 or leave placement at its default")
         if self.shards > 1 and self.prefetch > 0:
             raise ValueError(
                 f"shards={self.shards} does not compose with prefetch yet "
@@ -289,6 +306,19 @@ class OpenLoopReport:
     per_shard: Optional[dict] = None    # {shard: {issued, load_frac,
     #                                     mean_queue_depth, utilization,
     #                                     hit_rate}} when shards > 1
+    # --- streaming-mutation outcome (serve_open_loop(mutation_mix=)) ---
+    inserts: int = 0             # insert arrivals applied (delta staging)
+    deletes: int = 0             # delete arrivals applied (tombstones)
+    flushes: int = 0             # delta -> append-zone flushes
+    compactions: int = 0         # background compaction runs
+    bg_pages_read: int = 0       # background device reads (flush RMW +
+    #                              compaction page reads)
+    bg_pages_written: int = 0    # background page rewrites
+    bg_io_us: float = 0.0        # device time consumed by background I/O
+    bg_util: float = 0.0         # bg_io_us / elapsed — the goodput tax
+    overlap_ratio: float = 0.0   # live-vertex OR(G) after the run (0.0 on
+    #                              non-mutating runs: frozen indexes report
+    #                              it at build time instead)
 
     def row(self) -> dict:
         row = {
@@ -308,6 +338,15 @@ class OpenLoopReport:
             "overlap_frac": round(self.overlap_frac, 4),
             "slo_violation_frac": round(self.slo_violation_frac, 4),
         }
+        if self.inserts or self.deletes or self.flushes or self.compactions:
+            row.update({
+                "inserts": self.inserts, "deletes": self.deletes,
+                "flushes": self.flushes, "compactions": self.compactions,
+                "bg_pages_read": self.bg_pages_read,
+                "bg_pages_written": self.bg_pages_written,
+                "bg_util": round(self.bg_util, 4),
+                "overlap_ratio": round(self.overlap_ratio, 4),
+            })
         row.update(_tenant_columns(self.per_tenant))
         row.update(_shard_columns(self.per_shard))
         return row
@@ -346,6 +385,19 @@ class _ShardWindow:
             read_service_us(self.server.cfg.page_bytes)
         self.batches += 1
 
+    def add_background(self, page_ids, service_us_each: float) -> None:
+        """Background update I/O (flush/compaction) lands on the owning
+        shards' busy time: each page is billed to its placement HOME at
+        `service_us_each` (read or write unit), so a compaction run is
+        visible in the very same per-shard utilization column query I/O
+        fills."""
+        if not self.on or len(page_ids) == 0:
+            return
+        homes = self.server.store.placement.page_to_shard[
+            np.asarray(page_ids, np.int64)]
+        counts = np.bincount(homes, minlength=len(self.busy_us))
+        self.busy_us += counts * service_us_each
+
     def report(self, elapsed_us: float) -> Optional[dict]:
         if not self.on or self.batches == 0:
             return None
@@ -383,18 +435,39 @@ class AnnServer:
         use_cache = self.cfg.cache_frac > 0 and index.cached.any()
         self._stateful = scfg.cache_policy in DYNAMIC_POLICIES
         self._sharded = scfg.shards > 1
+        self._mutable = isinstance(index, MutableIndex)
+        placement = scfg.placement
+        if self._sharded and placement == "replicated" \
+                and page_profile is None:
+            # the hot-set ranking needs a page profile; a server without
+            # one can still run — fall back LOUDLY instead of crashing in
+            # the store build (`make_placement` stays strict for callers
+            # who configured replicated deliberately with data in hand)
+            warnings.warn(
+                "placement='replicated' without a page_profile: no hot set "
+                "can be ranked — falling back to 'round-robin'. Pass "
+                "AnnServer(page_profile=profile_from_trace(...)) to "
+                "replicate the workload's hot pages.", stacklevel=2)
+            placement = "round-robin"
         self.store = build_store(
             index.layout,
             cached_vertices=index.cached if use_cache else None,
             batched=True,
             cache_policy=scfg.cache_policy if self._stateful else "none",
-            cache_bytes=scfg.cache_bytes, prefetch=scfg.prefetch,
+            cache_bytes=scfg.cache_bytes,
+            prefetch=scfg.prefetch,
             tenants=scfg.tenants if self._stateful else 1,
             tenant_shares=scfg.tenant_shares,
             rebalance_every=scfg.cache_rebalance_every,
-            shards=scfg.shards, placement=scfg.placement,
+            shards=scfg.shards,
+            placement=placement if self._sharded else "round-robin",
             page_profile=page_profile,
-            placement_hot_frac=scfg.placement_hot_frac)
+            placement_hot_frac=scfg.placement_hot_frac,
+            mutable=self._mutable)
+        if self._mutable:
+            # flushes/compactions must invalidate THIS server's caches and
+            # charge its books, not just the facade's
+            index.attach_store(self.store)
         self._degraded_cfgs = {}    # degrade level -> SearchConfig
 
     # -- batch executor ------------------------------------------------------
@@ -404,19 +477,30 @@ class AnnServer:
         cache holds exactly one entry per (config, max_batch) — `cfg`
         overrides the server's config for degraded dispatches (one more jit
         entry per degrade level). Stateful cache policies additionally
-        collect the temporally ordered page trace their replay consumes."""
+        collect the temporally ordered page trace their replay consumes.
+
+        Over a MutableIndex with pending mutations the disk side runs the
+        tombstone-overfetch config and the delta's exact results are merged
+        into the result heap (MutableIndex.merge_mutations) — with zero
+        mutations both are identity and the frozen path is bit-identical."""
         cfg = cfg or self.cfg
+        orig = qvecs
         b = len(qvecs)
         mb = self.server_cfg.max_batch
         if self.server_cfg.pad_batches and b < mb:
             qvecs = np.concatenate(
                 [qvecs, np.repeat(qvecs[:1], mb - b, axis=0)])
+        kcfg = (self.index.disk_cfg(cfg)
+                if self._mutable and self.index.mutated else cfg)
         stats = search_batched(
-            self.store, self.index.pq, cfg, qvecs,
+            self.store, self.index.pq, kcfg, qvecs,
             medoid=self.index.medoid, memgraph=self.index.memgraph,
             batch=len(qvecs), collect_trace=self._stateful,
             account_kernel_io=False)
-        return stats.take(b)
+        stats = stats.take(b)
+        if self._mutable and self.index.mutated:
+            stats = self.index.merge_mutations(stats, orig, cfg)
+        return stats
 
     def _level_cfg(self, level: int):
         """SearchConfig for a degrade level: the configured beam knobs
@@ -639,9 +723,11 @@ class AnnServer:
 
     def _empty_open_report(self, rate_qps: float, duration_us: float,
                            ac: AdmissionController,
-                           per_tenant: Optional[dict]) -> OpenLoopReport:
+                           per_tenant: Optional[dict],
+                           extra: Optional[dict] = None) -> OpenLoopReport:
         """Report for a run that completed nothing (no arrivals, or every
-        arrival shed) — no kernel compile is paid."""
+        arrival shed) — no kernel compile is paid. `extra` carries the
+        mutation-outcome fields of an all-mutation window."""
         zi = np.zeros(0, np.int64)
         zf = np.zeros(0, np.float64)
         empty = QueryStats(
@@ -660,12 +746,14 @@ class AnnServer:
             query_indices=np.zeros(0, np.int64),
             offered_qps=ac.offered / (duration_us * 1e-6),
             admitted=ac.admitted, shed=ac.shed, degraded=0,
-            per_tenant=per_tenant)
+            per_tenant=per_tenant, **(extra or {}))
 
     def serve_open_loop(self, queries: np.ndarray, rate_qps: float,
                         duration_us: float, seed: int = 0,
                         tenants: Optional[np.ndarray] = None,
-                        arrivals: Optional[np.ndarray] = None
+                        arrivals: Optional[np.ndarray] = None,
+                        mutation_mix: Optional[MutationMix] = None,
+                        insert_pool: Optional[np.ndarray] = None
                         ) -> OpenLoopReport:
         """Poisson arrivals at `rate_qps` for `duration_us` of virtual time,
         query vectors drawn round-robin. Arrivals do not wait for
@@ -691,11 +779,39 @@ class AnnServer:
         closed loop; with `slo_p99_us` set it also dispatches as soon as the
         oldest enqueued query's remaining budget (SLO minus the estimated
         batch service time) runs out — trading batch-size efficiency for
-        tail latency exactly when the SLO is at risk."""
+        tail latency exactly when the SLO is at risk.
+
+        `mutation_mix` (repro/mutation/compactor.py: MutationMix) opens the
+        STREAMING workload: each arrival is independently a read (served as
+        above), an insert (staged in the MutableIndex's delta — requires an
+        AnnServer over a MutableIndex and an `insert_pool` of vectors), or
+        a delete (tombstones a random live vid). Inserts flush to the
+        append zone when the delta crosses the index's `flush_threshold`,
+        and the mix's compaction policy (none | threshold | continuous)
+        schedules the background re-pack. ALL background I/O — flush
+        read-modify-writes and compaction reads + rewrites — occupies the
+        same device: it pushes the next dispatch out (`bg_free`), lands on
+        the owning shards' busy time, and is reported per outcome
+        (`inserts`/`deletes`/`flushes`/`compactions`/`bg_*` on the
+        report), so compaction visibly competes with query I/O."""
         if rate_qps <= 0:
             raise ValueError(f"rate_qps={rate_qps} must be positive")
         if duration_us <= 0:
             raise ValueError(f"duration_us={duration_us} must be positive")
+        mm = mutation_mix if (mutation_mix is not None
+                              and mutation_mix.mutating) else None
+        if mm is not None:
+            if not self._mutable:
+                raise ValueError(
+                    "mutation_mix with insert/delete arrivals needs an "
+                    "AnnServer over a MutableIndex "
+                    "(repro.mutation.MutableIndex) — a frozen DiskIndex "
+                    "cannot absorb mutations")
+            if mm.insert_frac > 0 and (insert_pool is None
+                                       or len(insert_pool) == 0):
+                raise ValueError(
+                    "insert_frac > 0 needs a non-empty insert_pool of "
+                    "vectors to draw inserts from")
         queries = np.asarray(queries, np.float32)
         d = queries.shape[1]
         scfg = self.server_cfg
@@ -723,8 +839,30 @@ class AnnServer:
                           if multi_tenant else None)
             return self._empty_open_report(rate_qps, duration_us, ac,
                                            per_tenant)
-        qidx = np.arange(n) % len(queries)
+        # arrival kinds: 0 = read, 1 = insert, 2 = delete. Reads index the
+        # query pool round-robin BY READ ORDER, so a mutating mix serves
+        # the same read sequence a pure-read run would
+        if mm is not None:
+            rng_m = np.random.default_rng(mm.seed)
+            kinds = rng_m.choice(
+                3, size=n, p=[mm.read_frac, mm.insert_frac, mm.delete_frac])
+        else:
+            rng_m = None
+            kinds = np.zeros(n, np.int64)
+        reads = kinds == 0
+        n_reads = int(reads.sum())
+        qidx = (np.where(reads, np.cumsum(reads) - 1, 0)) % len(queries)
         arr_tenant = tenant_of[qidx]
+
+        # background-update device clock + per-outcome accounting: flush /
+        # compaction I/O holds the device (dispatches wait on bg_free) and
+        # is priced read/write asymmetrically
+        mu = {"inserts": 0, "deletes": 0, "flushes": 0, "compactions": 0,
+              "reads": 0, "writes": 0, "io_us": 0.0, "free": 0.0,
+              "ins_i": 0}
+        rd_us = self.model.read_service_us(self.cfg.page_bytes)
+        wr_us = self.model.write_service_us(self.cfg.page_bytes)
+        compactor = Compactor(self.index, mm) if mm is not None else None
 
         exec_free = 0.0
         est_service: Optional[float] = None
@@ -735,6 +873,38 @@ class AnnServer:
         shard_win = _ShardWindow(self)
         degraded_n = 0
         t_end = 0.0
+
+        def bg_run(acct, t: float, kind: str) -> None:
+            if not acct:
+                return
+            us = (acct["pages_read"] * rd_us
+                  + acct["pages_written"] * wr_us)
+            mu["free"] = max(mu["free"], t) + us
+            mu["io_us"] += us
+            mu["reads"] += acct["pages_read"]
+            mu["writes"] += acct["pages_written"]
+            mu[kind] += 1
+            shard_win.add_background(acct["read_pages"], rd_us)
+            shard_win.add_background(acct["written_pages"], wr_us)
+
+        def ingest(j: int, executor_idle: bool = False) -> None:
+            t = float(arr[j])
+            if kinds[j] == 0:
+                ac.offer(t, j, int(arr_tenant[j]),
+                         executor_idle=executor_idle)
+                return
+            if kinds[j] == 1:
+                self.index.insert(
+                    insert_pool[mu["ins_i"] % len(insert_pool)])
+                mu["ins_i"] += 1
+                mu["inserts"] += 1
+                bg_run(self.index.maybe_flush(), t, "flushes")
+            else:
+                vid = self.index.random_live_vid(rng_m)
+                if vid is not None and self.index.delete(vid):
+                    mu["deletes"] += 1
+            bg_run(compactor.after_mutation(), t, "compactions")
+
         i = 0
         mb = scfg.max_batch
         pend = ac.pending
@@ -742,9 +912,7 @@ class AnnServer:
             if not pend:
                 # idle until the next arrival; its admission decision is
                 # made at its own arrival instant
-                t0 = float(arr[i])
-                ac.offer(t0, i, int(arr_tenant[i]),
-                         executor_idle=exec_free <= t0)
+                ingest(i, executor_idle=exec_free <= float(arr[i]))
                 i += 1
                 continue
             t0 = pend[0][0]
@@ -756,15 +924,20 @@ class AnnServer:
                 deadline = min(deadline, t0 + max(budget, 0.0))
             # admissions while the batcher would still be waiting to fill
             while i < n and len(pend) < mb and arr[i] <= deadline:
-                ac.offer(float(arr[i]), i, int(arr_tenant[i]))
+                ingest(i)
                 i += 1
             t_fill = pend[mb - 1][0] if len(pend) >= mb else np.inf
-            dispatch = max(exec_free, min(deadline, t_fill), t0)
+            dispatch = max(exec_free, mu["free"],
+                           min(deadline, t_fill), t0)
             # admissions up to the dispatch instant (under backlog this is
             # where the queue bound binds and shedding happens)
             while i < n and arr[i] <= dispatch:
-                ac.offer(float(arr[i]), i, int(arr_tenant[i]))
+                ingest(i)
                 i += 1
+            # mutations ingested above may have pushed the background
+            # clock — the device must be free of flush/compaction work
+            # before this batch can start
+            dispatch = max(dispatch, mu["free"])
             level = ac.pressure_level()
             batch = ac.take_batch(mb)
             b_times = np.asarray([t for t, _, _ in batch])
@@ -792,19 +965,32 @@ class AnnServer:
             mean_lat = float(lat.mean())
             est_service = (mean_lat if est_service is None
                            else 0.5 * est_service + 0.5 * mean_lat)
+            if compactor is not None:
+                # "continuous" policy: a bounded repair rides each batch
+                bg_run(compactor.after_batch(), exec_free, "compactions")
 
+        t_end = max(t_end, mu["free"])
+        mut_kw = {}
+        if mm is not None:
+            mut_kw = dict(
+                inserts=mu["inserts"], deletes=mu["deletes"],
+                flushes=mu["flushes"], compactions=mu["compactions"],
+                bg_pages_read=mu["reads"], bg_pages_written=mu["writes"],
+                bg_io_us=mu["io_us"],
+                bg_util=mu["io_us"] / t_end if t_end > 0 else 0.0,
+                overlap_ratio=self.index.overlap_ratio())
         completed = len(lat_out)
         per_tenant = (self._per_tenant_report(tenant_out,
                                               np.asarray(lat_out), ac)
                       if multi_tenant else None)
         if completed == 0:
             return self._empty_open_report(rate_qps, duration_us, ac,
-                                           per_tenant)
+                                           per_tenant, extra=mut_kw)
         all_stats = QueryStats.concat(stats_out)
         lat_arr = np.asarray(lat_out)
         slo = scfg.slo_p99_us
         return OpenLoopReport(
-            rate_qps=rate_qps, duration_us=duration_us, offered=n,
+            rate_qps=rate_qps, duration_us=duration_us, offered=n_reads,
             completed=completed, elapsed_us=t_end,
             qps=completed / (t_end * 1e-6) if t_end > 0 else 0.0,
             mean_latency_us=float(lat_arr.mean()),
@@ -820,6 +1006,7 @@ class AnnServer:
                                 if slo is not None else 0.0),
             stats=all_stats,
             query_indices=np.asarray(qidx_out, np.int64),
-            offered_qps=n / (duration_us * 1e-6),
+            offered_qps=n_reads / (duration_us * 1e-6),
             admitted=ac.admitted, shed=ac.shed, degraded=degraded_n,
-            per_tenant=per_tenant, per_shard=shard_win.report(t_end))
+            per_tenant=per_tenant, per_shard=shard_win.report(t_end),
+            **mut_kw)

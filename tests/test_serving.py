@@ -128,6 +128,9 @@ def test_closed_loop_rejects_bad_workers_and_rounds(base_index,
     (dict(max_batch=0), "max_batch=0"),
     (dict(max_wait_us=-1.0), "max_wait_us=-1.0"),
     (dict(cache_policy="lru"), "cache_bytes"),
+    (dict(cache_bytes=1 << 20), "with cache_policy='none'"),
+    (dict(cache_policy="lru", cache_bytes=1 << 20,
+          cache_rebalance_every=8), "no partitions to rebalance"),
     (dict(cache_policy="arc", cache_bytes=1 << 20), "cache_policy='arc'"),
     (dict(prefetch=-1), "prefetch=-1"),
     (dict(prefetch=1), "prefetch needs a cache_policy"),
@@ -138,6 +141,7 @@ def test_closed_loop_rejects_bad_workers_and_rounds(base_index,
      "does not compose with prefetch"),
     (dict(shards=2, tenants=2, cache_policy="lru", cache_bytes=1 << 20),
      "does not compose with"),
+    (dict(placement="contiguous"), "with shards=1 places nothing"),
     (dict(placement_hot_frac=0.0), "placement_hot_frac=0.0"),
 ])
 def test_server_config_rejects_invalid(kw, msg):

@@ -20,6 +20,7 @@ import pytest
 from repro.core.pages import build_layout
 from repro.io import (BatchedPageStore, PrefetchingPageStore,
                       SharedCachePageStore, ShardedPageStore, build_store)
+from repro.mutation import MutablePageStore
 
 pytestmark = pytest.mark.fast
 
@@ -61,6 +62,15 @@ STACKS = {
     "sharded-cached": lambda lay: build_store(
         lay, batched=True, shards=3, cache_policy="lru",
         cache_bytes=9 * lay.page_bytes),
+    # streaming updates: the MutablePageStore wrapper must keep mirroring
+    # the stack it decorates on every read path (writes book at its layer)
+    "mutable": lambda lay: build_store(lay, batched=True, mutable=True),
+    "mutable-lru": lambda lay: build_store(
+        lay, batched=True, cache_policy="lru",
+        cache_bytes=8 * lay.page_bytes, mutable=True),
+    "mutable-sharded": lambda lay: build_store(
+        lay, batched=True, shards=3, cache_policy="lru",
+        cache_bytes=9 * lay.page_bytes, mutable=True),
 }
 
 
@@ -88,10 +98,16 @@ def _drive(store, layout):
         store.coalesce(vis)
     # the record-returning paths move the same books
     store.fetch([0, 1, 1, 2])
-    if not isinstance(store, ShardedPageStore):
+    if isinstance(store, MutablePageStore):
+        # rewrite path: invalidation + write booking + the charged re-read
+        store.invalidate([0, 1])
+        store.note_write([0, 1])
+        store.fetch([0, 1])
+    if not hasattr(store, "shard_counters"):
         # vertex-granular fetches pass through the shard layer into the
         # roll-up only (static-vertex territory), which would skew the
         # per-shard == roll-up audit below — drive them elsewhere
+        # (hasattr sees through the mutable wrapper's delegation)
         vids = np.asarray([2, 9, 40])
         store.fetch(layout.vid2page[vids], vids=vids)
 
@@ -112,6 +128,16 @@ def test_conservation_at_every_layer(name, tiny_layout):
     for layer, inner in zip(layers, layers[1:] + [None]):
         c = layer.counters
         label = f"{name}:{type(layer).__name__}"
+        if isinstance(layer, MutablePageStore):
+            # the mutable wrapper mirrors EVERY read-path field of the
+            # stack it decorates; writes are its own ledger
+            for f in ("pages_requested", "pages_fetched", "cache_hits",
+                      "records_fetched"):
+                assert getattr(c, f) == getattr(inner.counters, f), \
+                    (label, f)
+            assert c.pages_written == 2, label
+            assert inner.counters.pages_written == 0, label
+            continue
         if isinstance(layer, (BatchedPageStore, ShardedPageStore)):
             # coalescing layers bank their cross-query dedup as savings,
             # not hits (ShardedPageStore's union path included); hits and
