@@ -1,6 +1,8 @@
 """Kernel microbench: interpret-mode wall time (CPU, correctness path) plus
-the ANALYTIC v5e numbers the kernel is designed for (HBM-bound page_scan,
-MXU-bound pq_adc) — the dry-run/roofline methodology at kernel granularity."""
+the ANALYTIC device numbers the kernel is designed for (HBM-bound page_scan,
+MXU-bound pq_adc) — the dry-run/roofline methodology at kernel granularity.
+Peaks come from the shared device table (repro.core.device_model;
+REPRO_TPU_DEVICE selects the entry, default v5e)."""
 from __future__ import annotations
 
 import time
@@ -9,10 +11,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.device_model import tpu_device
 from repro.kernels import page_scan, pq_adc
 
-HBM_BW = 819e9
-PEAK = 197e12
+_DEV = tpu_device()
+HBM_BW = _DEV.hbm_bw     # module-level names kept for importers
+PEAK = _DEV.peak_flops
 
 
 def _time(fn, *args, iters=5):

@@ -1,10 +1,15 @@
 """§Roofline: three-term roofline per (arch x shape x mesh) from the compiled
-dry-run artifacts (benchmarks/artifacts/dryrun*/...).
+dry-run artifacts (benchmarks/artifacts/dryrun*/...), plus a disk-kernel
+section giving the SAME compute/memory terms to the search hot-path kernels
+(page_scan / pq_adc / fused_page_rank) so the fused pipeline's position on
+the roofline sits next to the model kernels'.
 
-Terms (per device, seconds per step):
-  compute    = HLO_FLOPs / peak_FLOPs            (197 TFLOP/s bf16, v5e)
-  memory     = HLO_bytes / HBM_bw                (819 GB/s)
-  collective = collective_bytes / link_bw        (~50 GB/s/link ICI)
+Terms (per device, seconds per step), priced on the named device table
+shared with the analytic model (repro.core.device_model.TPU_DEVICES;
+REPRO_TPU_DEVICE selects, default v5e):
+  compute    = HLO_FLOPs / peak_FLOPs            (v5e: 197 TFLOP/s bf16)
+  memory     = HLO_bytes / HBM_bw                (v5e: 819 GB/s)
+  collective = collective_bytes / link_bw        (v5e: ~50 GB/s/link ICI)
 
 HLO_FLOPs/bytes are trip-count-corrected per-device numbers from
 repro.parallel.hloanalysis (XLA's cost_analysis counts loop bodies once).
@@ -22,9 +27,14 @@ import json
 import sys
 from pathlib import Path
 
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
-LINK_BW = 50e9
+from repro.core.device_model import tpu_device
+
+# module-level names kept for importers; values now come from the shared
+# device table (REPRO_TPU_DEVICE selects the entry, default v5e)
+_DEV = tpu_device()
+PEAK_FLOPS = _DEV.peak_flops
+HBM_BW = _DEV.hbm_bw
+LINK_BW = _DEV.link_bw
 
 ART = Path(__file__).resolve().parent / "artifacts"
 
@@ -137,6 +147,44 @@ def analyze(mesh_tag="single", tag=""):
     return out
 
 
+def disk_kernels(n_pages: int = 8, n_p: int = 8, d: int = 128, m: int = 16,
+                 q: int = 32):
+    """Analytic roofline terms for the disk-path search kernels, per beam
+    step of `n_pages` pages — no artifacts needed (the kernels' FLOP/byte
+    counts are closed-form in their shapes). The fused kernel's row is the
+    two halves' work under ONE memory pass and one dispatch; its bound is
+    max(compute, memory) instead of their sum, which is exactly the overlap
+    the measured benchmark (benchmarks/fused_pipeline.py) checks."""
+    recs = n_pages * n_p
+    vec_bytes = recs * d * 4
+    code_bytes = recs * m
+    lut_bytes = m * 256 * q * 4
+    out_bytes = recs * q * 4
+    scan_flops = recs * q * (2 * d + 3)          # x2 - 2xq + q2 per pair
+    adc_flops = recs * q * 2 * m * 256           # one-hot matmul form
+    rows = []
+    for name, flops, bytes_ in (
+            ("page_scan", scan_flops, vec_bytes + q * d * 4 + out_bytes),
+            ("pq_adc", adc_flops, code_bytes + lut_bytes + out_bytes),
+            ("fused_page_rank", scan_flops + adc_flops,
+             vec_bytes + code_bytes + q * d * 4 + lut_bytes + 2 * out_bytes)):
+        t_c = _DEV.compute_s(flops)
+        t_m = _DEV.memory_s(bytes_)
+        fused = name == "fused_page_rank"
+        bound = max(t_c, t_m) if fused else t_c + t_m
+        rows.append({
+            "kernel": name, "device": _DEV.name,
+            "pages": n_pages, "n_p": n_p, "d": d, "M": m, "Q": q,
+            "flops": f"{flops:.3e}", "bytes": f"{bytes_:.3e}",
+            "intensity_flop_per_byte": f"{flops / bytes_:.1f}",
+            "compute_us": f"{t_c * 1e6:.3f}",
+            "memory_us": f"{t_m * 1e6:.3f}",
+            "bound": ("compute" if t_c > t_m else "memory"),
+            "step_us": f"{bound * 1e6:.3f}",
+        })
+    return rows
+
+
 def main(argv=None):
     argv = argv or sys.argv[1:]
     tag = argv[argv.index("--tag") + 1] if "--tag" in argv else ""
@@ -149,6 +197,12 @@ def main(argv=None):
         print(",".join(cols))
         for r in rows:
             print(",".join(str(r.get(c, "")) for c in cols))
+    rows = disk_kernels()
+    cols = list(rows[0])
+    print(f"== roofline (disk-path kernels, {_DEV.name}) ==")
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r.get(c, "")) for c in cols))
     return 0
 
 

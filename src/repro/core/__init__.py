@@ -1,7 +1,8 @@
 from repro.core.builder import build_index
 from repro.core.dataset import (DATASET_NAMES, Dataset, make_dataset,
                                 recall_at_k)
-from repro.core.device_model import SSDModel, summarize
+from repro.core.device_model import (SSDModel, TPU_DEVICES, TPUDevice,
+                                     summarize, tpu_device)
 from repro.core.engine import DiskIndex, SearchConfig, SearchResult
 from repro.core.pages import overlap_ratio
 from repro.core.presets import PRESETS, get_preset

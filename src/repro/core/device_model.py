@@ -28,8 +28,47 @@ bytes at 819 GB/s with DMA/compute overlap — see benchmarks/roofline.py.
 from __future__ import annotations
 
 import dataclasses
+import os
 
 import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TPUDevice:
+    """Peak constants of one accelerator generation — the single pricing
+    table shared by the model-side rooflines (benchmarks/roofline.py), the
+    kernel microbenches (benchmarks/kernels.py) and the fused disk-path
+    sweep (benchmarks/fused_pipeline.py), so kernel and model benchmarks
+    price the same hardware instead of each hard-coding its own copy."""
+    name: str
+    peak_flops: float          # bf16 FLOP/s (MXU peak)
+    hbm_bw: float              # bytes/s HBM
+    link_bw: float             # bytes/s per ICI link
+    vmem_bytes: int = 16 * 2**20   # per-core VMEM (double-buffer budget)
+
+    def compute_s(self, flops: float) -> float:
+        return flops / self.peak_flops
+
+    def memory_s(self, nbytes: float) -> float:
+        return nbytes / self.hbm_bw
+
+
+TPU_DEVICES = {
+    "v5e": TPUDevice("v5e", peak_flops=197e12, hbm_bw=819e9, link_bw=50e9),
+    "v4": TPUDevice("v4", peak_flops=275e12, hbm_bw=1228e9, link_bw=100e9,
+                    vmem_bytes=32 * 2**20),
+    "v5p": TPUDevice("v5p", peak_flops=459e12, hbm_bw=2765e9, link_bw=100e9),
+}
+
+
+def tpu_device(name: str = "") -> TPUDevice:
+    """Resolve a device table entry; `REPRO_TPU_DEVICE` overrides the
+    default (v5e — the generation the paper-era kernels were sized for)."""
+    name = name or os.environ.get("REPRO_TPU_DEVICE", "v5e")
+    if name not in TPU_DEVICES:
+        raise ValueError(f"unknown TPU device {name!r}; "
+                         f"choose from {sorted(TPU_DEVICES)}")
+    return TPU_DEVICES[name]
 
 
 @dataclasses.dataclass(frozen=True)

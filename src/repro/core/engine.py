@@ -55,7 +55,13 @@ class SearchConfig:
     dynamic_width: bool = False
     dw_min: int = 2
     dw_max: int = 32
-    pipeline: bool = False
+    # Pipeline execution mode: False = sequential; True = speculative
+    # overlap priced by the device model's analytic rebate; "fused" = the
+    # same search (bit-identical results) but the hot path additionally
+    # re-executes the traced page schedule through the fused pipelined
+    # Pallas kernel (kernels/fused_search.py) and carries MEASURED kernel
+    # step time on QueryStats.measured_step_us next to the modeled time.
+    pipeline: bool = False       # False | True | "fused"
     pipeline_spec: int = 2       # speculative reads per step
 
     def __post_init__(self):
@@ -75,6 +81,10 @@ class SearchConfig:
             raise ValueError(
                 f"pipeline_spec={self.pipeline_spec} must be >= 0 "
                 f"(speculative reads per step)")
+        if self.pipeline not in (False, True, "fused"):
+            raise ValueError(
+                f"pipeline={self.pipeline!r} must be False, True, or "
+                f"'fused' (the measured double-buffered kernel path)")
 
     def replace(self, **kw):
         return dataclasses.replace(self, **kw)

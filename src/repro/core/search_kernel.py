@@ -42,6 +42,8 @@ Technique mapping (SearchConfig):
 from __future__ import annotations
 
 import functools
+import os
+import time
 
 import jax
 import jax.numpy as jnp
@@ -239,6 +241,98 @@ def _search_batch(page_vids, page_vecs, page_nbrs, vid2page, vid2slot,
 
 
 # ---------------------------------------------------------------------------
+# Fused-pipeline measurement surface (SearchConfig.pipeline == "fused"):
+# results still come from _search_batch above (bit-identical to
+# pipeline=True — the golden facade test pins it); the traced page schedule
+# is then RE-EXECUTED through the fused double-buffered Pallas kernel
+# (kernels/fused_search.py) to produce a measured wall-clock step time the
+# analytic prefetch_overlap rebate can be compared against.
+
+# interpret-mode grid steps are Python-priced, so cap the measured slice of
+# the schedule and extrapolate by the per-page rate
+MEASURE_PAGES_CAP = int(os.environ.get("REPRO_FUSED_MEASURE_PAGES", 256))
+
+
+def hop_major_schedule(page_trace: np.ndarray) -> np.ndarray:
+    """The batch's page stream in hop-major order: hop t's distinct pages
+    (the batch union — what one pipelined grid would stage for the whole
+    dispatch), then hop t+1's, exactly the order the LAANN-style look-ahead
+    issues them. page_trace (B, max_iters, w), -1 padded."""
+    trace = np.asarray(page_trace)
+    out = []
+    for h in range(trace.shape[1]):
+        pages = np.unique(trace[:, h, :])
+        out.append(pages[pages >= 0])
+    return (np.concatenate(out) if out else np.zeros(0, np.int64))
+
+
+def query_luts(pq_centroids, queries):
+    """Per-query ADC LUTs (Q, M, 256): squared subspace distances from each
+    query's subvectors to every centroid — the fused kernel's stacked-LUT
+    operand (one MXU matmul per subspace covers the whole query block)."""
+    cent = jnp.asarray(pq_centroids)
+    m, ksub, dsub = cent.shape
+    qs = jnp.asarray(queries, jnp.float32).reshape(-1, m, 1, dsub)
+    return jnp.sum(jnp.square(cent[None] - qs), axis=-1)
+
+
+def _page_codes(store, pq):
+    """(P, n_p, M) uint8 page-aligned PQ codes (the residents' codes laid
+    out like the vector tiles, so the fused kernel's code DMA mirrors the
+    page DMA). Memoized on the store next to its kernel arrays."""
+    cached = getattr(store, "_device_page_codes", None)
+    if cached is None or cached.shape[0] != store.layout.num_pages:
+        vids = store.layout.page_vids
+        safe = np.clip(vids, 0, pq.codes.shape[0] - 1)
+        codes = np.ascontiguousarray(pq.codes[safe])
+        codes[vids < 0] = 0
+        cached = jnp.asarray(codes)
+        store._device_page_codes = cached
+    return cached
+
+
+def measure_step_us(store, pq, queries, page_trace, *,
+                    mode: str = "fused",
+                    max_pages: int | None = None) -> dict:
+    """Wall-clock one batch's page schedule through the kernel hot path.
+
+    mode="fused": kernels.fused_page_rank — ONE pipelined grid, page DMA of
+    step i+1 double-buffered behind the fused exact-scan + ADC compute of
+    step i. mode="split": the two separately-jitted grids it replaces
+    (kernels.page_scan, then kernels.page_adc), run back to back.
+
+    Returns {"wall_us", "pages", "us_per_page"}; the schedule is capped at
+    `max_pages` (default MEASURE_PAGES_CAP) and the per-page rate is what
+    callers scale by a query's own page count. Compilation is excluded (one
+    warm-up call per shape bucket; the bucketed wrappers in kernels/ops.py
+    keep the bucket count small)."""
+    from repro import kernels as ops
+    sched = hop_major_schedule(page_trace)
+    cap = MEASURE_PAGES_CAP if max_pages is None else max_pages
+    if cap > 0:
+        sched = sched[:cap]
+    if len(sched) == 0:
+        return {"wall_us": 0.0, "pages": 0, "us_per_page": 0.0}
+    _, vecs, _, _, _ = store.kernel_arrays()
+    codes = _page_codes(store, pq)
+    qb = jnp.asarray(queries, jnp.float32)
+    lut = query_luts(pq.centroids, qb)
+    ids = jnp.asarray(sched, jnp.int32)
+    if mode == "fused":
+        def fn():
+            return ops.fused_page_rank(vecs, codes, ids, qb, lut)
+    elif mode == "split":
+        def fn():
+            return (ops.page_scan(vecs, ids, qb),
+                    ops.page_adc(codes, ids, lut))
+    else:
+        raise ValueError(f"mode={mode!r} must be 'fused' or 'split'")
+    jax.block_until_ready(fn())      # compile + warm the bucket
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn())
+    wall = (time.perf_counter() - t0) * 1e6
+    return {"wall_us": wall, "pages": len(sched),
+            "us_per_page": wall / len(sched)}
 
 
 def search_batched(store, pq, cfg, queries: np.ndarray, *,
@@ -253,7 +347,16 @@ def search_batched(store, pq, cfg, queries: np.ndarray, *,
     compatibility facade) and the serving layer's batch executor.
     `collect_trace` adds the temporally ordered per-hop page trace the
     stateful cache subsystem replays (QueryStats.page_trace).
+
+    With `cfg.pipeline == "fused"` the trace is collected regardless (it IS
+    the fused kernel's page schedule), the search results stay bit-identical
+    to `pipeline=True`, and each batch's schedule is re-executed through the
+    fused pipelined kernel: QueryStats.measured_step_us carries each query's
+    measured kernel wall clock (its page count x the batch's measured
+    per-page rate) next to the modeled device time.
     """
+    fused = cfg.pipeline == "fused"
+    track_trace = collect_trace or fused
     vids, vecs, nbrs, v2p, v2s = store.kernel_arrays()
     # the device copy of the vertex cache mask is memoized on the store
     # (same rationale as kernel_arrays: the serving layer calls this once
@@ -293,11 +396,15 @@ def search_batched(store, pq, cfg, queries: np.ndarray, *,
             dynamic_width=cfg.dynamic_width, dw_min=cfg.dw_min,
             dw_max=cfg.dw_max, pipeline=cfg.pipeline,
             spec=cfg.pipeline_spec, track_visited=collect_visited,
-            track_trace=collect_trace)
+            track_trace=track_trace)
         out = {k_: np.asarray(v) for k_, v in out.items()}
         out["mem_hops"] = mem_hops
         out["mem_evals"] = mem_evals
         st = QueryStats.from_kernel(out)
+        if fused:
+            m = measure_step_us(store, pq, qb, out["page_trace"])
+            st.measured_step_us = (st.page_reads.astype(np.float64)
+                                   * m["us_per_page"])
         if account_kernel_io:
             store.note_kernel_io(st)
         parts.append(st)

@@ -52,6 +52,13 @@ class QueryStats:
     # partitions and keys per-tenant report accounting. Optional: single-
     # tenant callers never carry it.
     tenants: Optional[np.ndarray] = None
+    # (B,) float64 — MEASURED fused-kernel wall clock per query in us (the
+    # query's page count x the batch's measured per-page step rate), set
+    # only under SearchConfig.pipeline == "fused"
+    # (core/search_kernel.measure_step_us). Sits NEXT TO the modeled device
+    # time — never inside it: the device model stays the paper's analytic
+    # account, and this column is what it is compared against.
+    measured_step_us: Optional[np.ndarray] = None
 
     def __len__(self) -> int:
         return len(self.hops)
@@ -68,7 +75,7 @@ class QueryStats:
         "full_evals": "full_evals", "pq_evals": "pq_evals",
         "mem_hops": "mem_hops", "mem_evals": "mem_evals",
         "visited_pages": "visited_pages", "page_trace": "page_trace",
-        "tenants": "tenants",
+        "tenants": "tenants", "measured_step_us": "measured_step_us",
     }
 
     @classmethod
@@ -79,6 +86,7 @@ class QueryStats:
         kw.setdefault("visited_pages", None)
         kw.setdefault("page_trace", None)
         kw.setdefault("tenants", None)
+        kw.setdefault("measured_step_us", None)
         return cls(**kw)
 
     @classmethod

@@ -1,1 +1,2 @@
-from repro.kernels.ops import page_scan, pq_adc
+from repro.kernels.ops import (bucket_size, fused_page_rank, page_adc,
+                               page_scan, pq_adc)

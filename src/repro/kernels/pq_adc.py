@@ -8,6 +8,14 @@ sublane-aligned. The LUT (M, 256) f32 = 16 KiB lives wholly in VMEM; codes
 stream from HBM block-by-block through the grid pipeline (double-buffered).
 
 Tiling contract: block_n multiple of 8 (sublanes); 256 = 2 lanes of 128.
+
+Pad guard: N is padded up to a block_n multiple, and the padded tail used to
+score the zero pad's codes as if they were real records — garbage distances
+that any caller consuming the padded buffer (the shape-bucketed wrappers in
+kernels/ops.py keep it) could mistake for candidates. The kernel now masks
+every row at or past the true length to +inf; `nvalid` lets a bucketing
+caller that pre-padded name the true length as a TRACED scalar, so one
+compiled kernel serves every length inside a bucket.
 """
 from __future__ import annotations
 
@@ -19,7 +27,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(codes_ref, lut_ref, out_ref):
+def _kernel(nvalid_ref, codes_ref, lut_ref, out_ref):
     codes = codes_ref[...]                                # (bn, M) uint8
     lut = lut_ref[...]                                    # (M, 256) f32
     bn, m = codes.shape
@@ -29,26 +37,43 @@ def _kernel(codes_ref, lut_ref, out_ref):
                   == jax.lax.broadcasted_iota(jnp.int32, (bn, 256), 1))
         acc = acc + jnp.dot(onehot.astype(jnp.float32), lut[j],
                             preferred_element_type=jnp.float32)
-    out_ref[...] = acc
+    # pad-tail guard: rows past the true length scored the zero pad's codes
+    # — poison them so no caller can rank the pad as a candidate
+    row = pl.program_id(0) * bn + jax.lax.broadcasted_iota(
+        jnp.int32, (bn,), 0)
+    out_ref[...] = jnp.where(row < nvalid_ref[0], acc, jnp.inf)
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
-def pq_adc(codes, lut, *, block_n=512, interpret=True):
-    """codes (N, M) uint8; lut (M, 256) f32 -> (N,) f32."""
+@functools.partial(jax.jit,
+                   static_argnames=("block_n", "interpret", "keep_pad"))
+def pq_adc(codes, lut, *, block_n=512, interpret=True, keep_pad=False,
+           nvalid=None):
+    """codes (N, M) uint8; lut (M, 256) f32 -> (N,) f32.
+
+    `nvalid` (traced scalar, defaults to N) marks the true row count when
+    the caller already padded `codes` (shape bucketing): rows >= nvalid
+    come back +inf. `keep_pad=True` returns the full padded buffer (its
+    tail guarded to +inf) instead of slicing — the bucketed wrappers slice
+    once at their own bucket boundary."""
     n, m = codes.shape
     pad = (-n) % block_n
     if pad:
         codes = jnp.pad(codes, ((0, pad), (0, 0)))
     np_ = codes.shape[0]
-    out = pl.pallas_call(
-        _kernel,
+    nv = jnp.asarray([n if nvalid is None else nvalid], jnp.int32)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=(np_ // block_n,),
         in_specs=[
-            pl.BlockSpec((block_n, m), lambda i: (i, 0)),
-            pl.BlockSpec((m, 256), lambda i: (0, 0)),
+            pl.BlockSpec((block_n, m), lambda i, nv: (i, 0)),
+            pl.BlockSpec((m, 256), lambda i, nv: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_specs=pl.BlockSpec((block_n,), lambda i, nv: (i,)),
+    )
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((np_,), jnp.float32),
         interpret=interpret,
-    )(codes, lut)
-    return out[:n]
+    )(nv, codes, lut)
+    return out if keep_pad else out[:n]

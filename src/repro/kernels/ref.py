@@ -2,6 +2,7 @@
 every shape/dtype sweep in tests/test_kernels.py)."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -23,3 +24,15 @@ def pq_adc_ref(codes, lut):
     m = lut.shape[0]
     gathered = jnp.take_along_axis(lut.T, codes.astype(jnp.int32), axis=0)
     return jnp.sum(gathered, axis=-1)
+
+
+def fused_page_rank_ref(pages, page_codes, page_ids, q, lut):
+    """Oracle for kernels/fused_search.fused_page_rank: the composition of
+    page_scan_ref with a per-page, per-query ADC scan. pages (P, n_p, d);
+    page_codes (P, n_p, M) uint8; page_ids (W,); q (Q, d); lut (Q, M, 256).
+    Returns (exact (W, n_p, Q), adc (W, n_p, Q)) f32."""
+    exact = page_scan_ref(pages, page_ids, q)
+    codes = page_codes[page_ids].astype(jnp.int32)            # (W, n_p, M)
+    onehot = jax.nn.one_hot(codes, 256, dtype=jnp.float32)    # (W,n_p,M,256)
+    adc = jnp.einsum("wnmc,qmc->wnq", onehot, lut.astype(jnp.float32))
+    return exact, adc

@@ -205,6 +205,16 @@ class ServerConfig:
                 f"(0, 1] (the replica-eligible fraction of the page space)")
 
 
+def _measured_step(stats: QueryStats) -> float:
+    """Mean MEASURED fused-kernel wall clock per query (us), 0.0 unless the
+    search config ran `pipeline="fused"` — reported next to the modeled
+    device latency, never folded into it (the virtual clock stays the
+    paper's analytic device model; this column is its measured check)."""
+    if stats.measured_step_us is None or len(stats) == 0:
+        return 0.0
+    return float(np.mean(stats.measured_step_us))
+
+
 def _tenant_columns(per_tenant: Optional[dict]) -> dict:
     """Flatten the per-tenant report rows into t<N>_* columns so `row()`
     carries the multi-tenant outcome into the benchmark tables (previously
@@ -252,6 +262,9 @@ class ServingReport:
     query_indices: np.ndarray    # (queries,) index into the submitted pool
     cache_hit_rate: float = 0.0  # stateful-policy hits / requested
     overlap_frac: float = 0.0    # prefetched fraction of issued reads
+    measured_step_us: float = 0.0    # mean MEASURED fused-kernel wall clock
+    #                                  per query (pipeline="fused" only) —
+    #                                  sits next to mean_latency_us (modeled)
     per_tenant: Optional[dict] = None   # {tenant: {completed, latency,
     #                                     cache_hit_rate, ...}} when the
     #                                     workload is multi-tenant
@@ -272,6 +285,8 @@ class ServingReport:
             "cache_hit_rate": round(self.cache_hit_rate, 4),
             "overlap_frac": round(self.overlap_frac, 4),
         }
+        if self.measured_step_us:
+            row["measured_step_us"] = round(self.measured_step_us, 1)
         row.update(_tenant_columns(self.per_tenant))
         row.update(_shard_columns(self.per_shard))
         return row
@@ -294,6 +309,8 @@ class OpenLoopReport:
     overlap_frac: float
     slo_p99_us: Optional[float]
     slo_violation_frac: float    # fraction of ADMITTED queries past the SLO
+    measured_step_us: float      # mean MEASURED fused-kernel wall clock per
+    #                              query (pipeline="fused" only; 0.0 else)
     stats: QueryStats
     query_indices: np.ndarray    # pool index per COMPLETED query
     # --- admission outcome (ServerConfig.admission) ---
@@ -338,6 +355,8 @@ class OpenLoopReport:
             "overlap_frac": round(self.overlap_frac, 4),
             "slo_violation_frac": round(self.slo_violation_frac, 4),
         }
+        if self.measured_step_us:
+            row["measured_step_us"] = round(self.measured_step_us, 1)
         if self.inserts or self.deletes or self.flushes or self.compactions:
             row.update({
                 "inserts": self.inserts, "deletes": self.deletes,
@@ -715,6 +734,7 @@ class AnnServer:
             cache_hit_rate=(hits_total / requested_total
                             if requested_total else 0.0),
             overlap_frac=(overlap_w / issued_total if issued_total else 0.0),
+            measured_step_us=_measured_step(all_stats),
             per_tenant=(self._per_tenant_report(tenant_out, lat_arr)
                         if multi_tenant else None),
             per_shard=shard_win.report(t_end))
@@ -742,7 +762,7 @@ class AnnServer:
             p99_latency_us=0.0, mean_batch_size=0.0, pages_per_query=0.0,
             issued_pages_per_query=0.0, cache_hit_rate=0.0,
             overlap_frac=0.0, slo_p99_us=self.server_cfg.slo_p99_us,
-            slo_violation_frac=0.0, stats=empty,
+            slo_violation_frac=0.0, measured_step_us=0.0, stats=empty,
             query_indices=np.zeros(0, np.int64),
             offered_qps=ac.offered / (duration_us * 1e-6),
             admitted=ac.admitted, shed=ac.shed, degraded=0,
@@ -1004,6 +1024,7 @@ class AnnServer:
             slo_p99_us=slo,
             slo_violation_frac=(float(np.mean(lat_arr > slo))
                                 if slo is not None else 0.0),
+            measured_step_us=_measured_step(all_stats),
             stats=all_stats,
             query_indices=np.asarray(qidx_out, np.int64),
             offered_qps=n_reads / (duration_us * 1e-6),
