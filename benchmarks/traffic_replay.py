@@ -1,0 +1,326 @@
+"""Fleet traffic replay: a generated production trace served by replica
+groups — the million-user serving story at simulation scale.
+
+The trace generator composes the four load dimensions real serving fleets
+are sized against, all from ONE seeded rng:
+
+  diurnal rate        an inhomogeneous Poisson process (thinning) whose
+                      rate follows a sin^2 day curve: quiet base -> peak
+                      -> back to base inside the window
+  Zipf-drift skew     request popularity is Zipf over the query pool and
+                      the hot set DRIFTS: the rank permutation is redrawn
+                      every epoch, so pages that were hot go cold
+  tenant mix          each request carries a tenant id drawn from a fixed
+                      mix (cache partitions + per-tenant report columns)
+  mutation mix        a slice of arrivals are inserts/deletes with
+                      threshold compaction (MutableIndex + Compactor)
+
+Three acceptance scenarios run against `FleetServer`
+(repro/serving/fleet.py), each recorded in the machine-readable artifact
+`benchmarks/artifacts/BENCH_fleet.json` (path: REPRO_FLEET_OUT):
+
+  1. goodput_scaling   flood a fixed 2-shard store with 1/2/4 replica
+                       groups: saturation goodput must rise MONOTONICALLY
+                       with the group count (more copies = more devices).
+  2. migration         the diurnal + Zipf-drift + tenant trace over the
+                       deliberately bad CONTIGUOUS placement, migration on
+                       vs off at the SAME seed. Search results are
+                       bit-identical by construction (migration moves I/O,
+                       never results), so recall is matched exactly — and
+                       p99 under the diurnal peak must be STRICTLY lower
+                       with the hot-page rebalancer on.
+  3. autoscale         the full trace (mutations included) against a
+                       hysteresis autoscaler: the fleet must ADD groups on
+                       the diurnal ramp, DRAIN-AND-DROP them after the
+                       peak, and hold window utilization inside (or
+                       correcting toward) the hysteresis band.
+
+How to read the output: one CSV block per scenario (benchmarks/common.py
+print_table); `r<N>_util` columns are per-group busy fractions, `shards`
+counts (group x shard) device cells, `shard_imbalance` is max/mean issued
+reads across ALL fleet devices. The JSON artifact carries the same rows
+plus the boolean verdicts CI gates on.
+
+Env knobs (dataset sizing in benchmarks/common.py):
+  REPRO_FLEET_DURATION  trace window in us of virtual time (default 30000)
+  REPRO_FLEET_GROUPS    scaling scenario group counts     (default 1,2,4)
+  REPRO_FLEET_SHARDS    shards per group                  (default 2)
+  REPRO_FLEET_FLOOD     scenario-1 flood rate in qps      (default 200000)
+  REPRO_FLEET_BASE      diurnal base rate in qps (default: calibrated off
+                        scenario 1's measured single-group saturation
+                        goodput, so the day curve stresses the fleet the
+                        same way at every dataset shape)
+  REPRO_FLEET_PEAK      diurnal peak rate in qps          (same default)
+  REPRO_FLEET_OUT       artifact path   (default benchmarks/artifacts/
+                                         BENCH_fleet.json)
+  REPRO_FLEET_GUARD     assert the three verdicts (default 1)
+"""
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks import common
+from benchmarks.updates import insert_pool
+from repro.core import get_preset, recall_at_k
+from repro.mutation import MutableIndex, MutationConfig, MutationMix
+from repro.serving import (AutoscaleConfig, FleetConfig, FleetServer,
+                           MigrationConfig, ServerConfig)
+
+DURATION_US = float(os.environ.get("REPRO_FLEET_DURATION", 30000.0))
+GROUPS = tuple(int(g) for g in os.environ.get(
+    "REPRO_FLEET_GROUPS", "1,2,4").split(","))
+SHARDS = int(os.environ.get("REPRO_FLEET_SHARDS", 2))
+FLOOD = float(os.environ.get("REPRO_FLEET_FLOOD", 200000.0))
+# diurnal rates: explicit env overrides, else calibrated from the measured
+# single-group saturation goodput (see main)
+BASE_ENV = os.environ.get("REPRO_FLEET_BASE")
+PEAK_ENV = os.environ.get("REPRO_FLEET_PEAK")
+OUT = Path(os.environ.get(
+    "REPRO_FLEET_OUT",
+    Path(__file__).resolve().parent / "artifacts" / "BENCH_fleet.json"))
+GUARD = os.environ.get("REPRO_FLEET_GUARD", "1") == "1"
+SYSTEM = "starling"
+L = 32
+TRACE_SEED = 17
+TENANT_MIX = (0.7, 0.3)         # two tenants, 70/30 request share
+
+
+# -- trace generation --------------------------------------------------------
+
+def diurnal_arrivals(rng: np.random.Generator, base_qps: float,
+                     peak_qps: float, duration_us: float,
+                     cycles: float = 1.0) -> np.ndarray:
+    """Inhomogeneous Poisson arrivals by thinning: rate(t) = base +
+    (peak - base) * sin^2(pi * cycles * t / duration) — one full day curve
+    per `cycles` (quiet -> peak -> quiet)."""
+    peak = max(base_qps, peak_qps)
+    out = []
+    t = 0.0
+    while True:
+        t += float(rng.exponential(1e6 / peak))
+        if t >= duration_us:
+            break
+        r = base_qps + (peak_qps - base_qps) * np.sin(
+            np.pi * cycles * t / duration_us) ** 2
+        if rng.random() < r / peak:
+            out.append(t)
+    return np.asarray(out)
+
+
+def zipf_drift_ids(rng: np.random.Generator, n_queries: int, length: int,
+                   a: float = 1.2, epochs: int = 4) -> np.ndarray:
+    """Request sequence over query ids: Zipf(a) popularity with the rank
+    permutation redrawn every epoch — the hot set drifts through the pool
+    over the trace, so a static hot-page ranking goes stale."""
+    ranks = np.arange(1, n_queries + 1, dtype=np.float64) ** -a
+    p = ranks / ranks.sum()
+    per = -(-length // epochs)          # ceil
+    ids = []
+    for _ in range(epochs):
+        perm = rng.permutation(n_queries)
+        ids.append(perm[rng.choice(n_queries, size=per, p=p)])
+    return np.concatenate(ids)[:length]
+
+
+def make_trace(rng: np.random.Generator, queries: np.ndarray,
+               duration_us: float, base: float, peak: float) -> dict:
+    """The production trace: diurnal arrivals + a Zipf-drift request pool
+    + a tenant id per request. `FleetServer.serve_fleet` consumes the pool
+    round-robin in read order, so the pool ORDER is the drift."""
+    arr = diurnal_arrivals(rng, base, peak, duration_us)
+    ids = zipf_drift_ids(rng, len(queries), max(len(arr), 1))
+    tenants = rng.choice(len(TENANT_MIX), size=len(ids), p=TENANT_MIX)
+    return {"arrivals": arr, "ids": ids, "pool": queries[ids],
+            "tenants": tenants,
+            "rate_qps": len(arr) / (duration_us * 1e-6)}
+
+
+def _fleet_row(tag: str, rep) -> dict:
+    keep = ("qps", "p99_latency_us", "mean_latency_us", "shed",
+            "cache_hit_rate", "shard_imbalance", "max_shard_util",
+            "groups", "groups_final", "groups_added", "groups_dropped",
+            "migrations", "promoted_pages", "mig_pages_written",
+            "shed_budget", "seed")
+    row = rep.row()
+    return {"scenario": tag,
+            **{k: row[k] for k in keep if k in row}}
+
+
+# -- scenario 1: saturation goodput vs replica groups ------------------------
+
+def goodput_scaling(name: str) -> dict:
+    ds = common.dataset(name)
+    cfg = get_preset(SYSTEM, L=L)
+    idx = common.index(name, SYSTEM)
+    scfg = ServerConfig(max_batch=16, shards=SHARDS, cache_policy="lru",
+                        cache_bytes=1 << 18, prefetch=1)
+    rows, qps = [], []
+    for g in GROUPS:
+        srv = FleetServer(idx, cfg, common.MODEL, scfg,
+                          fleet_cfg=FleetConfig(replica_groups=g))
+        rep = srv.serve_fleet(ds.queries, rate_qps=FLOOD,
+                              duration_us=DURATION_US / 3, seed=5)
+        rows.append({**_fleet_row("goodput", rep), "groups": g})
+        qps.append(rep.qps)
+    monotone = all(a < b for a, b in zip(qps, qps[1:]))
+    return {"rows": rows, "goodput_qps": [round(q, 1) for q in qps],
+            "monotone": monotone}
+
+
+# -- scenario 2: hot-page migration under the diurnal peak -------------------
+
+def migration_ab(name: str, base: float, peak: float) -> dict:
+    """Same trace, same seed, contiguous base placement; migration on vs
+    off. Results are bit-identical (recall matched by construction); the
+    rebalancer must buy a strictly lower p99."""
+    ds = common.dataset(name)
+    cfg = get_preset(SYSTEM, L=L)
+    idx = common.index(name, SYSTEM)
+    trace = make_trace(np.random.default_rng(TRACE_SEED), ds.queries,
+                       DURATION_US, base, peak)
+    scfg = ServerConfig(max_batch=16, shards=SHARDS,
+                        placement="contiguous", cache_policy="lru",
+                        cache_bytes=1 << 18, prefetch=1,
+                        tenants=len(TENANT_MIX))
+    out = {}
+    # a SMALL hot set in frequent, bounded waves: the replicated pages
+    # must fit the per-shard cache slices, or duplication + demote churn
+    # costs more misses than the device balance buys (swept: hot_frac
+    # 0.2/max_moves 256 LOSES p99 by thrashing the 64-page group caches)
+    for tag, mig in (("off", None),
+                     ("on", MigrationConfig(every_us=DURATION_US / 10,
+                                            hot_frac=0.05, max_moves=32))):
+        srv = FleetServer(idx, cfg, common.MODEL, scfg,
+                          fleet_cfg=FleetConfig(replica_groups=2,
+                                                migration=mig))
+        rep = srv.serve_fleet(
+            trace["pool"], rate_qps=trace["rate_qps"],
+            duration_us=DURATION_US, seed=TRACE_SEED,
+            tenants=trace["tenants"], arrivals=trace["arrivals"])
+        rec = recall_at_k(
+            rep.stats.ids, ds.gt[trace["ids"][rep.query_indices]], cfg.k)
+        out[tag] = {**_fleet_row(f"migration_{tag}", rep),
+                    "recall@10": round(rec, 4),
+                    "p99_latency_us": round(rep.p99_latency_us, 1)}
+    p99_on = out["on"]["p99_latency_us"]
+    p99_off = out["off"]["p99_latency_us"]
+    return {"rows": [out["off"], out["on"]],
+            "p99_off": p99_off, "p99_on": p99_on,
+            "p99_win": p99_on < p99_off,
+            "matched_recall":
+                out["on"]["recall@10"] == out["off"]["recall@10"]}
+
+
+# -- scenario 3: autoscaling tracking the diurnal rate -----------------------
+
+def autoscale_tracking(name: str, base: float, peak: float) -> dict:
+    """The FULL trace (mutations included) against the hysteresis
+    autoscaler: groups must be added on the ramp, drained-and-dropped
+    after the peak, and the windowed occupancy must sit inside — or be
+    actively corrected toward — the band."""
+    ds = common.dataset(name)
+    cfg = get_preset(SYSTEM, L=L)
+    idx = common.index(name, SYSTEM)
+    mi = MutableIndex(idx, MutationConfig(
+        flush_threshold=32, growth_chunk=512, insert_L=L))
+    trace = make_trace(np.random.default_rng(TRACE_SEED + 1), ds.queries,
+                       2 * DURATION_US, base, peak)
+    asc = AutoscaleConfig(check_every_us=DURATION_US / 10,
+                          util_high=0.6, util_low=0.25,
+                          min_groups=1, max_groups=4)
+    srv = FleetServer(mi, cfg, common.MODEL,
+                      ServerConfig(max_batch=16, shards=SHARDS,
+                                   cache_policy="lru",
+                                   cache_bytes=1 << 18,
+                                   tenants=len(TENANT_MIX)),
+                      fleet_cfg=FleetConfig(replica_groups=1,
+                                            autoscale=asc))
+    mix = MutationMix(insert_frac=0.02, delete_frac=0.005,
+                      compaction="threshold", threshold=0.2, max_pages=16)
+    rep = srv.serve_fleet(
+        trace["pool"], rate_qps=trace["rate_qps"],
+        duration_us=2 * DURATION_US, seed=TRACE_SEED + 1,
+        tenants=trace["tenants"], arrivals=trace["arrivals"],
+        mutation_mix=mix, insert_pool=insert_pool(ds.vectors))
+    tl = rep.timeline or []
+    # a sample tracks the band if util is inside it, the scaler just
+    # acted to push it back (an out-of-band sample WITH a correction is
+    # the hysteresis loop working, not failing), or the scaler is PINNED
+    # at a configured bound with no corrective action left (util above
+    # the band at max_groups / below it at min_groups)
+    in_band = [asc.util_low <= u <= asc.util_high or ev != ""
+               or (u > asc.util_high and g >= asc.max_groups)
+               or (u < asc.util_low and g <= asc.min_groups)
+               for _, g, u, ev in tl]
+    return {"rows": [_fleet_row("autoscale", rep)],
+            "timeline": [list(s) for s in tl],
+            "groups_added": rep.groups_added,
+            "groups_dropped": rep.groups_dropped,
+            "in_band_frac": (round(float(np.mean(in_band)), 4)
+                             if in_band else 0.0),
+            "tracked": rep.groups_added >= 1 and rep.groups_dropped >= 1}
+
+
+def main(name: str = "sift-like") -> dict:
+    scaling = goodput_scaling(name)
+    # calibrate the day curve off the MEASURED single-group saturation
+    # goodput: base well under one group (quiet tail a grown fleet must
+    # scale back down from), peak several groups' worth (the ramp that
+    # forces scale-up / shows migration's balancing win). The base ratio
+    # is deliberately small: sat1 is measured at FULL batches, while the
+    # quiet tail serves small batches whose per-query service is several
+    # times worse (unamortized hop issue overhead), so 0.1 x sat1 of
+    # offered load is roughly 0.5-0.7 of one group's low-rate capacity
+    sat1 = max(scaling["goodput_qps"][0], 1.0)
+    base = float(BASE_ENV) if BASE_ENV else round(0.1 * sat1, 1)
+    peak = float(PEAK_ENV) if PEAK_ENV else round(2.5 * sat1, 1)
+    result = {
+        "config": {"n": common.BENCH_N, "queries": common.BENCH_Q,
+                   "shards": SHARDS, "groups": list(GROUPS),
+                   "duration_us": DURATION_US, "flood_qps": FLOOD,
+                   "base_qps": base, "peak_qps": peak,
+                   "sat1_qps": round(sat1, 1), "trace_seed": TRACE_SEED},
+        "goodput_scaling": scaling,
+        "migration": migration_ab(name, base, peak),
+        "autoscale": autoscale_tracking(name, base, peak),
+    }
+    rows = (result["goodput_scaling"]["rows"]
+            + result["migration"]["rows"]
+            + result["autoscale"]["rows"])
+    common.print_table(
+        rows, cols=["scenario", "groups", "groups_final", "groups_added",
+                    "groups_dropped", "qps", "p99_latency_us",
+                    "migrations", "promoted_pages", "shard_imbalance",
+                    "max_shard_util", "recall@10"])
+    print(f"# goodput monotone in groups: "
+          f"{result['goodput_scaling']['monotone']} "
+          f"{result['goodput_scaling']['goodput_qps']}")
+    print(f"# migration p99 win: {result['migration']['p99_win']} "
+          f"(off={result['migration']['p99_off']} "
+          f"on={result['migration']['p99_on']}), matched recall: "
+          f"{result['migration']['matched_recall']}")
+    print(f"# autoscale tracked: {result['autoscale']['tracked']} "
+          f"(+{result['autoscale']['groups_added']} "
+          f"-{result['autoscale']['groups_dropped']}, in-band "
+          f"{result['autoscale']['in_band_frac']})")
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    OUT.write_text(json.dumps(result, indent=2))
+    print(f"# wrote {OUT}")
+    if GUARD:
+        assert result["goodput_scaling"]["monotone"], \
+            "goodput must rise monotonically with replica groups"
+        assert result["migration"]["p99_win"], \
+            "migration must strictly lower p99 under the diurnal peak"
+        assert result["migration"]["matched_recall"], \
+            "migration must not change search results"
+        assert result["autoscale"]["tracked"], \
+            "autoscaler must add on the ramp and drop after the peak"
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -170,12 +170,33 @@ class SSDModel:
         slowest device does, and an imbalanced placement is visibly slower
         than a balanced one at equal total pages. `pages` is ignored on
         this path (the split already carries the volume); hop issue
-        overhead and the dedup/prefetch rebates apply unchanged."""
+        overhead and the dedup/prefetch rebates apply unchanged.
+
+        Fleet serving (replica groups, repro/serving/fleet.py) adds one
+        axis: `shard_pages` (B, R, S) with `shard_depths` (R, S) prices
+        R full replicas of the shard set. Every (replica, shard) pair is
+        its own device, so the completion time is the max over REPLICAS
+        THEN SHARDS — flattening the grid to R*S parallel devices computes
+        exactly that, and an imbalanced fleet (one replica overloaded at
+        equal total pages) stays visibly slower than a balanced one."""
         if shard_pages is not None:
             sp = np.asarray(shard_pages, np.float64)
-            if sp.ndim != 2:
+            if sp.ndim == 3:
+                # (B, R, S) replica grid -> R*S parallel devices; max over
+                # the flattened axis IS max-over-replicas-then-shards
+                B, R, S = sp.shape
+                sp = sp.reshape(B, R * S)
+                if shard_depths is not None:
+                    sd = np.asarray(shard_depths, np.float64)
+                    if sd.shape != (R, S):
+                        raise ValueError(
+                            f"shard_depths must be ({R}, {S}) for "
+                            f"shard_pages {(B, R, S)}; got {sd.shape}")
+                    shard_depths = sd.reshape(R * S)
+            elif sp.ndim != 2:
                 raise ValueError(
-                    f"shard_pages must be (B, shards); got {sp.shape}")
+                    f"shard_pages must be (B, shards) or (B, replicas, "
+                    f"shards); got {sp.shape}")
             if shard_depths is None:
                 depths = np.full(sp.shape[1], float(queue_depth))
             else:

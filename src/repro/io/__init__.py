@@ -8,6 +8,7 @@ from repro.io.page_store import (ArrayPageStore, BatchedPageStore,
                                  build_store, charge_inner_reads)
 from repro.io.sharded_store import (PLACEMENTS, Placement, ShardedPageStore,
                                     make_placement, make_shard_caches,
+                                    profile_from_counters,
                                     profile_from_trace)
 
 __all__ = ["ArrayPageStore", "BatchedPageStore", "CachedPageStore",
@@ -16,4 +17,5 @@ __all__ = ["ArrayPageStore", "BatchedPageStore", "CachedPageStore",
            "Placement", "PrefetchingPageStore", "ShardedPageStore",
            "SharedCachePageStore", "StoreCounters", "TwoQPageCache",
            "build_store", "charge_inner_reads", "make_cache",
-           "make_placement", "make_shard_caches", "profile_from_trace"]
+           "make_placement", "make_shard_caches", "profile_from_counters",
+           "profile_from_trace"]

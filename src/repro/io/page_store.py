@@ -345,7 +345,12 @@ def build_store(layout, cached_vertices: Optional[np.ndarray] = None,
                                               `placement` (PLACEMENTS), the
                                               dynamic cache (if any) split
                                               into per-shard slices of the
-                                              same `cache_bytes` budget
+                                              same `cache_bytes` budget —
+                                              tenant-partitioned per shard
+                                              when `tenants > 1`, with
+                                              `prefetch` look-ahead issued
+                                              against the owning shard's
+                                              queue
 
     The static vertex mask (§4.1.2) is now just one policy of the cache
     subsystem: "static-vertex" requires `cached_vertices`; passing
@@ -360,9 +365,12 @@ def build_store(layout, cached_vertices: Optional[np.ndarray] = None,
 
     `shards > 1` replaces the single-device stateful top with a
     `ShardedPageStore`: placement "replicated" additionally needs
-    `page_profile` (per-page access counts, `profile_from_trace`). Per-shard
-    look-ahead and tenant-partitioned shard caches are later PRs, so
-    `prefetch`/`tenants` do not compose with `shards` yet.
+    `page_profile` (per-page access counts — `profile_from_trace` offline,
+    or `profile_from_counters` from a live store's read counters). All
+    three axes compose: `tenants > 1` makes each shard's cache slice a
+    per-tenant partition, and `prefetch > 0` issues look-ahead against the
+    owning shard's queue (both still need a dynamic `cache_policy` to hold
+    the state, same as on one device).
 
     `mutable=True` wraps the finished stack in a `MutablePageStore`
     (repro/mutation/mutable_store.py): page-version tracking plus cache
@@ -418,15 +426,6 @@ def build_store(layout, cached_vertices: Optional[np.ndarray] = None,
             f"cache_policy to one of {DYNAMIC_POLICIES}")
     if shards < 1:
         raise ValueError(f"shards={shards} must be >= 1")
-    if shards > 1 and prefetch > 0:
-        raise ValueError(
-            "prefetch composes with the single-device stateful stores; "
-            "per-shard look-ahead queues are a later PR — set shards=1 or "
-            "prefetch=0")
-    if shards > 1 and tenants > 1:
-        raise ValueError(
-            "tenant-partitioned shard caches are a later PR — set shards=1 "
-            "or tenants=1")
     store = ArrayPageStore(layout)
     if cached_vertices is not None and cached_vertices.any():
         store = CachedPageStore(store, cached_vertices)
@@ -437,9 +436,12 @@ def build_store(layout, cached_vertices: Optional[np.ndarray] = None,
                             profile=page_profile,
                             hot_frac=placement_hot_frac)
         caches = (make_shard_caches(cache_policy, cache_bytes,
-                                    layout.page_bytes, shards)
+                                    layout.page_bytes, shards,
+                                    tenants=tenants,
+                                    tenant_shares=tenant_shares,
+                                    rebalance_every=rebalance_every)
                   if cache_policy in DYNAMIC_POLICIES else None)
-        store = ShardedPageStore(store, pl, caches)
+        store = ShardedPageStore(store, pl, caches, lookahead=prefetch)
     elif cache_policy in DYNAMIC_POLICIES:
         cache = make_cache(cache_policy, cache_bytes, layout.page_bytes,
                            tenants=tenants, tenant_shares=tenant_shares,

@@ -20,10 +20,32 @@ adds the distributed half of the store stack:
                       shard of the batch, so a skewed workload's hot set
                       stops pinning one device.
   profile_from_trace — per-page access counts from a (B, hops, w) trace,
-                      the profile `replicated` ranks by.
+                      the profile `replicated` ranks by (offline seeding).
+  profile_from_counters — the same profile from a LIVE store's per-page
+                      issued-read counters (`ShardedPageStore.
+                      page_read_counts`), so the hot set can be seeded or
+                      re-ranked online, mid-serve, with no offline trace —
+                      the cold-start path for "replicated" and the window
+                      signal hot-page migration re-ranks on.
   ShardedPageStore  — decorator: each shard owns its own device queue
                       accounting, `StoreCounters`, and (optionally) its own
-                      slice of ONE shared byte-budgeted page-cache budget.
+                      slice of ONE shared byte-budgeted page-cache budget —
+                      tenant-partitioned per shard when the budget is
+                      multi-tenant, with `lookahead > 0` issuing LAANN-style
+                      prefetch against the owning shard's queue.
+
+The fleet extensions (PR 7)
+---------------------------
+Three compositions that used to be rejected now land here: (1) per-shard
+caches may be `PartitionedPageCache` slices (shard x tenant: each shard's
+budget slice is itself split per tenant, so isolation holds on every
+device); (2) `lookahead > 0` replays the trace with look-ahead — a hop's
+future pages are admitted into (and charged on) the shard that OWNS them
+before the demand access arrives, and the issued volume is reported as
+`prefetch_issued`/`overlap_frac` for the device model's overlap rebate;
+(3) `set_replicated(mask)` swaps the replicated hot set IN PLACE, the
+store-side half of online hot-page migration (the serving layer bills the
+copy I/O and invalidates stale residency via MutablePageStore).
 
 The device-time contract
 ------------------------
@@ -50,7 +72,8 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.io.page_cache import POLICIES, PageCache, floor_capacity_pages
+from repro.io.page_cache import (POLICIES, PageCache, PartitionedPageCache,
+                                 floor_capacity_pages)
 from repro.io.page_store import (StoreCounters, book_charged_reads,
                                  charge_inner_reads, fetch_mirroring_inner)
 
@@ -117,6 +140,25 @@ def profile_from_trace(page_trace: np.ndarray, num_pages: int) -> np.ndarray:
     return np.bincount(flat, minlength=num_pages)
 
 
+def profile_from_counters(store) -> np.ndarray:
+    """Per-page access counts from a LIVE sharded store's own counters
+    (`ShardedPageStore.page_read_counts`: every page-routed issued read,
+    accumulated across the store's lifetime) — the ONLINE twin of
+    `profile_from_trace`. This is how a "replicated" placement escapes its
+    cold start: serve a warm-up window under any placement, rank the hot
+    set from what the devices actually read, and re-place — no offline
+    trace required. Hot-page migration re-ranks on successive deltas of
+    this profile. Returns a copy; the live counters keep counting."""
+    counts = getattr(store, "page_read_counts", None)
+    if counts is None:
+        raise ValueError(
+            "profile_from_counters needs a store that tracks live per-page "
+            "read counts (ShardedPageStore.page_read_counts) — build one "
+            "with build_store(shards=...), or rank an offline trace with "
+            "profile_from_trace instead")
+    return np.asarray(counts, np.int64).copy()
+
+
 def make_placement(policy: str, num_pages: int, shards: int, *,
                    profile: Optional[np.ndarray] = None,
                    hot_frac: float = 0.25,
@@ -164,18 +206,31 @@ def make_placement(policy: str, num_pages: int, shards: int, *,
 
 
 def make_shard_caches(policy: str, cache_bytes: int, page_bytes: int,
-                      shards: int) -> List[PageCache]:
+                      shards: int, *, tenants: int = 1,
+                      tenant_shares=None,
+                      rebalance_every: int = 0) -> List[PageCache]:
     """Split ONE byte budget into per-shard caches of `policy` (even split,
     1-page floor per shard) — the shard-local residency that keeps a hot
-    shard's working set from competing with a cold shard's."""
+    shard's working set from competing with a cold shard's. With
+    `tenants > 1` each shard's slice is itself a `PartitionedPageCache`
+    (shard x tenant grid: the floor becomes one page per (shard, tenant)
+    cell), so tenant isolation holds independently on every device and the
+    utility rebalance runs per shard over that shard's own access stream."""
     if policy not in POLICIES:
         raise ValueError(f"unknown cache policy {policy!r}; "
                          f"choose from {sorted(POLICIES)}")
-    capacity = floor_capacity_pages(cache_bytes, page_bytes, shards,
-                                    "shards")
+    if tenants < 1:
+        raise ValueError(f"tenants={tenants} must be >= 1")
+    capacity = floor_capacity_pages(cache_bytes, page_bytes,
+                                    shards * tenants,
+                                    "shard x tenant cells")
     base, extra = divmod(capacity, shards)
-    return [POLICIES[policy](base + (1 if s < extra else 0))
-            for s in range(shards)]
+    caps = [base + (1 if s < extra else 0) for s in range(shards)]
+    if tenants == 1:
+        return [POLICIES[policy](c) for c in caps]
+    return [PartitionedPageCache(c, tenants, policy, shares=tenant_shares,
+                                 rebalance_every=rebalance_every)
+            for c in caps]
 
 
 class ShardedPageStore:
@@ -189,20 +244,39 @@ class ShardedPageStore:
     device model's max-over-shards I/O term consumes."""
 
     def __init__(self, inner, placement: Placement,
-                 caches: Optional[Sequence[PageCache]] = None):
+                 caches: Optional[Sequence[PageCache]] = None,
+                 lookahead: int = 0):
         if caches is not None and len(caches) != placement.shards:
             raise ValueError(
                 f"{len(caches)} caches for {placement.shards} shards — "
                 f"each shard owns exactly one")
+        if lookahead < 0:
+            raise ValueError(f"lookahead={lookahead} must be >= 0")
+        if lookahead > 0 and caches is None:
+            raise ValueError(
+                "lookahead needs per-shard caches to hold the looked-ahead "
+                "pages (a cacheless prefetch would charge reads it cannot "
+                "keep)")
         self.inner = inner
         self.placement = placement
         self.shards = placement.shards
         self.caches = list(caches) if caches is not None else None
+        self.lookahead = int(lookahead)
+        # True when each shard cache is a PartitionedPageCache slice —
+        # replay then routes accesses to (shard, tenant) cells
+        self.tenant_aware = bool(self.caches) and all(
+            getattr(c, "tenant_aware", False) for c in self.caches)
         self.shard_counters = [StoreCounters()
                                for _ in range(placement.shards)]
         self.counters = StoreCounters()
         self.accesses = 0
-        self.prefetch_issued = 0   # sharded look-ahead lands in a later PR
+        self.prefetch_issued = 0
+        # live per-page issued-read counts (profile_from_counters): the
+        # online hotness signal replicated placement seeds / migration
+        # re-ranks on. Counted at the routing point — every page-routed
+        # DEVICE read, demand or prefetch; cache hits don't load a device
+        # so they don't count toward the placement signal
+        self.page_read_counts = np.zeros(inner.num_pages, np.int64)
         self.tenant_counters: Dict[int, Dict[str, int]] = {}
 
     @property
@@ -235,6 +309,8 @@ class ShardedPageStore:
             sc = self.shard_counters[s]
             sc.pages_requested += 1
             self.accesses += 1
+            # fetch() is tenant-blind (the protocol path carries no tenant);
+            # partitioned shard caches default to partition 0
             hit = (self.caches[s].access(p)
                    if self.caches is not None else False)
             if hit:
@@ -246,6 +322,7 @@ class ShardedPageStore:
                 self.counters.pages_fetched += 1
                 self.counters.records_fetched += n_p
                 loads[s] += 1
+                self.page_read_counts[p] += 1
                 charged.append(p)
         charge_inner_reads(self.inner, charged)
         lay = self.layout
@@ -265,6 +342,7 @@ class ShardedPageStore:
             sc = self.shard_counters[s]
             book_charged_reads(sc, 1, n_p)
             loads[s] += 1
+            self.page_read_counts[int(p)] += 1
         book_charged_reads(self.counters, len(page_ids), n_p)
         self.inner.charge(page_ids)
 
@@ -284,8 +362,14 @@ class ShardedPageStore:
                      tenants: Optional[np.ndarray] = None) -> dict:
         """Temporally ordered replay (QueryStats.page_trace) against the
         per-shard caches (a cold store with no caches charges every access).
-        Returns the SharedCachePageStore accounting contract plus the
-        per-shard split:
+        Tenant-partitioned shard caches route each access to the query's
+        tenant cell on the owning shard; with `lookahead > 0` a hop's next
+        `lookahead` hops' pages are admitted into the OWNING shard's cache
+        before the hop's demand accesses (admit(), not access(): prefetch
+        is not demand, so it moves no demand hit rates), charged on that
+        shard and counted in `prefetch_issued`/`overlap_frac` for the
+        device model's overlap rebate. Returns the SharedCachePageStore
+        accounting contract plus the per-shard split:
 
           shard_requested / shard_hits / shard_issued   (S,) int
           per_query_shard_pages   (B, S) float64 — reads each query charged
@@ -299,6 +383,7 @@ class ShardedPageStore:
             raise ValueError(
                 f"page_trace must be (B, hops, w); got shape {trace.shape}")
         B, S = trace.shape[0], self.shards
+        ta = self.tenant_aware
         if tenants is None:
             tns = np.zeros(B, np.int64)
         else:
@@ -308,6 +393,13 @@ class ShardedPageStore:
                     f"tenants has {len(tns)} entries for a {B}-query trace")
             if np.any(tns < 0):
                 raise ValueError("tenant ids must be >= 0")
+            if ta and len(tns) and \
+                    int(tns.max()) >= self.caches[0].tenants:
+                # validate BEFORE replaying: failing mid-loop would leave
+                # the shard caches half-warmed by a rejected batch
+                raise ValueError(
+                    f"tenant id {int(tns.max())} out of range for "
+                    f"{self.caches[0].tenants}-partition shard caches")
         per_query = np.zeros(B, np.float64)
         per_query_shard = np.zeros((B, S), np.float64)
         shard_req = np.zeros(S, np.int64)
@@ -317,19 +409,56 @@ class ShardedPageStore:
         per_tenant: Dict[int, Dict[str, int]] = {
             int(t): {"requested": 0, "hits": 0, "issued": 0}
             for t in np.unique(tns)}
-        requested = hits = issued = 0
+        requested = hits = issued = prefetched = 0
         charged: List[int] = []
+
+        def resident(s: int, p: int, t: int) -> bool:
+            return (p in self.caches[s].parts[t] if ta
+                    else p in self.caches[s])
+
         for b in range(B):
-            tacct = per_tenant[int(tns[b])]
-            for row in trace[b]:
-                for p in row[row >= 0]:
+            t = int(tns[b])
+            tacct = per_tenant[t]
+            hop_pages = [row[row >= 0] for row in trace[b]]
+            for h, row in enumerate(hop_pages):
+                if len(row) == 0:
+                    continue
+                # look-ahead against the OWNING shard's queue: the future
+                # hop's page is admitted into — and gated on — the shard
+                # (and tenant cell) the demand access will route to, so the
+                # prefetch charge lands on the same device the demand read
+                # would have
+                for ahead in hop_pages[h + 1: h + 1 + self.lookahead]:
+                    for p in ahead:
+                        p = int(p)
+                        s = self.placement.route(p, loads)
+                        if resident(s, p, t):
+                            continue
+                        if ta:
+                            self.caches[s].admit(p, t)
+                        else:
+                            self.caches[s].admit(p)
+                        issued += 1
+                        prefetched += 1
+                        shard_issued[s] += 1
+                        per_query[b] += 1
+                        per_query_shard[b, s] += 1
+                        loads[s] += 1
+                        tacct["issued"] += 1
+                        self.page_read_counts[p] += 1
+                        charged.append(p)
+                for p in row:
                     p = int(p)
                     s = self.placement.route(p, loads)
                     requested += 1
                     shard_req[s] += 1
                     tacct["requested"] += 1
-                    hit = (self.caches[s].access(p)
-                           if self.caches is not None else False)
+                    if self.caches is None:
+                        hit = False
+                    elif ta:
+                        hit = self.caches[s].access(p, t)
+                    else:
+                        hit = self.caches[s].access(p)
                     if hit:
                         hits += 1
                         shard_hits[s] += 1
@@ -341,8 +470,10 @@ class ShardedPageStore:
                         per_query_shard[b, s] += 1
                         loads[s] += 1
                         tacct["issued"] += 1
+                        self.page_read_counts[p] += 1
                         charged.append(p)
         self.accesses += requested
+        self.prefetch_issued += prefetched
         self.counters.pages_requested += requested
         self.counters.cache_hits += hits
         self.counters.pages_fetched += issued
@@ -364,7 +495,8 @@ class ShardedPageStore:
         charge_inner_reads(self.inner, charged)
         return {"requested": requested, "issued": issued, "hits": hits,
                 "per_query_issued": per_query,
-                "prefetch_issued": 0, "overlap_frac": 0.0,
+                "prefetch_issued": prefetched,
+                "overlap_frac": prefetched / issued if issued else 0.0,
                 "hit_rate": hits / requested if requested else 0.0,
                 "per_tenant": per_tenant,
                 "shard_requested": shard_req, "shard_hits": shard_hits,
@@ -391,6 +523,8 @@ class ShardedPageStore:
             shard_of[i] = s
             loads[s] += 1
         shard_issued = np.bincount(shard_of, minlength=S)
+        if len(union):
+            self.page_read_counts[union] += 1
         per_query_shard = np.zeros((B, S), np.float64)
         for i, p in enumerate(union):
             per_query_shard[visited[:, p], shard_of[i]] += 1
@@ -429,6 +563,15 @@ class ShardedPageStore:
         return {t: (a["hits"] / a["requested"] if a["requested"] else 0.0)
                 for t, a in sorted(self.tenant_counters.items())}
 
+    def tenant_capacities(self) -> Optional[List[int]]:
+        """Current per-tenant cache capacity summed across the shard
+        slices (None unless the shard caches are tenant-partitioned) —
+        the fleet-wide answer to "how many pages does tenant t hold"."""
+        if not self.tenant_aware:
+            return None
+        caps = [c.capacities() for c in self.caches]
+        return [sum(col) for col in zip(*caps)]
+
     def shard_rows(self) -> List[dict]:
         """Lifetime per-shard counter rows (placement + conservation
         audits; the serving reports add per-run depth/utilization). Covers
@@ -447,5 +590,31 @@ class ShardedPageStore:
 
     def extend_placement(self, num_pages: int) -> None:
         """Grow the page→shard map for an appended page space (streaming
-        updates); see Placement.extend."""
+        updates); see Placement.extend. The live read counters grow with
+        it (appended pages start cold)."""
         self.placement = self.placement.extend(num_pages)
+        grow = num_pages - len(self.page_read_counts)
+        if grow > 0:
+            self.page_read_counts = np.concatenate(
+                [self.page_read_counts, np.zeros(grow, np.int64)])
+
+    def set_replicated(self, replicated: np.ndarray) -> dict:
+        """Swap the replicated hot set IN PLACE — the store-side half of
+        online hot-page migration. Homes (`page_to_shard`) never move; only
+        the every-shard-resident mask changes, so routing flips between
+        "home only" and "least-loaded" per page. Returns the delta
+        (`promoted` gained replication — the serving layer bills the page
+        copies to the other S-1 shards and invalidates stale residency via
+        MutablePageStore.invalidate; `demoted` lost it — a metadata-only
+        change, their home copy was never stale)."""
+        mask = np.asarray(replicated, bool).reshape(-1)
+        if len(mask) != len(self.placement.page_to_shard):
+            raise ValueError(
+                f"replicated mask has {len(mask)} entries for "
+                f"{len(self.placement.page_to_shard)} pages")
+        old = self.placement.replicated
+        promoted = np.flatnonzero(mask & ~old)
+        demoted = np.flatnonzero(old & ~mask)
+        self.placement = dataclasses.replace(self.placement,
+                                             replicated=mask.copy())
+        return {"promoted": promoted, "demoted": demoted}

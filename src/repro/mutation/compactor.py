@@ -42,7 +42,11 @@ class MutationMix:
     threshold: float = 0.25      # dirty-page fraction that triggers a
     #                              "threshold" run
     max_pages: int = 8           # dirty-page budget per compaction run
-    seed: int = 0                # arrival-kind / delete-victim RNG
+    seed: int = 0                # DEPRECATED and unread: serve_open_loop
+    #                              draws arrival kinds and delete victims
+    #                              from the SAME seeded rng as the Poisson
+    #                              arrivals (one seed reproduces the whole
+    #                              run); kept so existing cell specs parse
 
     def __post_init__(self):
         if not 0.0 <= self.insert_frac <= 1.0:

@@ -2,6 +2,11 @@ from repro.serving.admission import (ADMISSION_POLICIES, AdmissionConfig,
                                      AdmissionController)
 from repro.serving.ann_server import (AnnServer, OpenLoopReport, ServerConfig,
                                       ServingReport)
+from repro.serving.fleet import (ROUTING_POLICIES, AutoscaleConfig,
+                                 FleetConfig, FleetReport, FleetServer,
+                                 MigrationConfig)
 
 __all__ = ["ADMISSION_POLICIES", "AdmissionConfig", "AdmissionController",
-           "AnnServer", "OpenLoopReport", "ServerConfig", "ServingReport"]
+           "AnnServer", "AutoscaleConfig", "FleetConfig", "FleetReport",
+           "FleetServer", "MigrationConfig", "OpenLoopReport",
+           "ROUTING_POLICIES", "ServerConfig", "ServingReport"]

@@ -55,7 +55,12 @@ completion times at per-shard queue depths
 reports carry `per_shard` rows (load share, mean queue depth, utilization,
 hit rate) plus the flattened `shards`/`shard_imbalance`/`max_shard_util`
 row columns. With a dynamic cache policy configured the same `cache_bytes`
-budget is split into per-shard caches.
+budget is split into per-shard caches; shards compose with `tenants` (each
+shard's slice is tenant-partitioned) and with `prefetch` (look-ahead issued
+against the owning shard's queue), so one ServerConfig can describe a full
+production store. Replica groups — N complete copies of the shard set with
+load-aware routing, hot-page migration and autoscaling — live one layer up,
+in repro/serving/fleet.py (FleetServer extends this class).
 
 Multi-tenancy: `ServerConfig.tenants > 1` splits the SAME `cache_bytes`
 budget into per-tenant partitions (repro/io/page_cache.py:
@@ -190,15 +195,6 @@ class ServerConfig:
                 f"placement={self.placement!r} with shards=1 places "
                 f"nothing — a single device has no placement decision; "
                 f"set shards > 1 or leave placement at its default")
-        if self.shards > 1 and self.prefetch > 0:
-            raise ValueError(
-                f"shards={self.shards} does not compose with prefetch yet "
-                f"(per-shard look-ahead queues are a later PR)")
-        if self.shards > 1 and self.tenants > 1:
-            raise ValueError(
-                f"shards={self.shards} does not compose with "
-                f"tenants={self.tenants} yet (tenant-partitioned shard "
-                f"caches are a later PR)")
         if not 0.0 < self.placement_hot_frac <= 1.0:
             raise ValueError(
                 f"placement_hot_frac={self.placement_hot_frac} must be in "
@@ -336,6 +332,10 @@ class OpenLoopReport:
     overlap_ratio: float = 0.0   # live-vertex OR(G) after the run (0.0 on
     #                              non-mutating runs: frozen indexes report
     #                              it at build time instead)
+    seed: Optional[int] = None   # the ONE rng seed that reproduces the run
+    #                              (arrivals + mutation kinds + delete
+    #                              victims); None when the caller supplied
+    #                              its own generator
 
     def row(self) -> dict:
         row = {
@@ -355,6 +355,8 @@ class OpenLoopReport:
             "overlap_frac": round(self.overlap_frac, 4),
             "slo_violation_frac": round(self.slo_violation_frac, 4),
         }
+        if self.seed is not None:
+            row["seed"] = self.seed
         if self.measured_step_us:
             row["measured_step_us"] = round(self.measured_step_us, 1)
         if self.inserts or self.deletes or self.flushes or self.compactions:
@@ -379,16 +381,22 @@ class _ShardWindow:
     queue depth, and busy-time utilization (shard service time over the
     run's elapsed virtual time)."""
 
-    def __init__(self, server: "AnnServer"):
-        self.server = server
-        self.on = server._sharded
+    def __init__(self, store, shards: int, model: SSDModel,
+                 page_bytes: int):
+        # explicit (store, shards, model, page_bytes) rather than a server
+        # handle: a fleet replica owns one window per replica STORE, while
+        # the single-server loops pass their own store — same aggregation
+        # either way
+        self.store = store
+        self.model = model
+        self.page_bytes = page_bytes
+        self.on = shards > 1
         if self.on:
-            S = server.server_cfg.shards
-            self.req = np.zeros(S, np.int64)
-            self.hits = np.zeros(S, np.int64)
-            self.issued = np.zeros(S, np.int64)
-            self.depth_sum = np.zeros(S, np.float64)
-            self.busy_us = np.zeros(S, np.float64)
+            self.req = np.zeros(shards, np.int64)
+            self.hits = np.zeros(shards, np.int64)
+            self.issued = np.zeros(shards, np.int64)
+            self.depth_sum = np.zeros(shards, np.float64)
+            self.busy_us = np.zeros(shards, np.float64)
             self.batches = 0
 
     def add(self, acct: dict) -> None:
@@ -400,8 +408,8 @@ class _ShardWindow:
         self.depth_sum += np.asarray(acct["shard_depths"], np.float64)
         # busy time in raw service units: issued x read_service_us is the
         # device-capacity fraction consumed, independent of queueing
-        self.busy_us += acct["shard_issued"] * self.server.model.\
-            read_service_us(self.server.cfg.page_bytes)
+        self.busy_us += acct["shard_issued"] * self.model.\
+            read_service_us(self.page_bytes)
         self.batches += 1
 
     def add_background(self, page_ids, service_us_each: float) -> None:
@@ -412,9 +420,22 @@ class _ShardWindow:
         fills."""
         if not self.on or len(page_ids) == 0:
             return
-        homes = self.server.store.placement.page_to_shard[
+        homes = self.store.placement.page_to_shard[
             np.asarray(page_ids, np.int64)]
         counts = np.bincount(homes, minlength=len(self.busy_us))
+        self.busy_us += counts * service_us_each
+
+    def add_broadcast_writes(self, page_ids, service_us_each: float) -> None:
+        """Hot-page migration copy I/O: a promoted page is WRITTEN to every
+        shard except its home (the home already holds it), each copy billed
+        at the write unit — the migration tax lands on the same per-shard
+        utilization column query and compaction I/O fill."""
+        if not self.on or len(page_ids) == 0:
+            return
+        homes = self.store.placement.page_to_shard[
+            np.asarray(page_ids, np.int64)]
+        counts = np.full(len(self.busy_us), len(page_ids), np.int64)
+        counts -= np.bincount(homes, minlength=len(self.busy_us))
         self.busy_us += counts * service_us_each
 
     def report(self, elapsed_us: float) -> Optional[dict]:
@@ -465,8 +486,10 @@ class AnnServer:
             warnings.warn(
                 "placement='replicated' without a page_profile: no hot set "
                 "can be ranked — falling back to 'round-robin'. Pass "
-                "AnnServer(page_profile=profile_from_trace(...)) to "
-                "replicate the workload's hot pages.", stacklevel=2)
+                "AnnServer(page_profile=profile_from_trace(...)) to seed "
+                "from an offline trace, or serve a warm-up window and call "
+                "reseed_placement() to rank the hot set from the store's "
+                "live read counters (profile_from_counters).", stacklevel=2)
             placement = "round-robin"
         self.store = build_store(
             index.layout,
@@ -538,6 +561,36 @@ class AnnServer:
                 dw_max=max(cfg.dw_min, int(round(cfg.dw_max * mult))))
         return self._degraded_cfgs[level]
 
+    def reseed_placement(self, hot_frac: Optional[float] = None) -> dict:
+        """Re-rank the replicated hot set from the store's LIVE per-page
+        read counters (repro.io.profile_from_counters) — the online escape
+        from the replicated-placement cold start: construct the server with
+        no page_profile (it warns and serves round-robin), run a warm-up
+        window, then call this to promote the top `hot_frac` (default:
+        ServerConfig.placement_hot_frac) pages the devices actually read.
+        Only pages with at least one observed read are promoted (an unseen
+        page has no evidence it is hot). Returns the swap delta
+        ({"promoted", "demoted"} page-id arrays, plus "hot_pages"). The
+        fleet's migration rebalancer applies the same ranking continuously
+        on windowed deltas (repro/serving/fleet.py)."""
+        if not self._sharded:
+            raise ValueError(
+                "reseed_placement needs a sharded server (shards > 1) — a "
+                "single device has no placement to re-rank")
+        from repro.io import profile_from_counters
+        profile = profile_from_counters(self.store)
+        frac = (hot_frac if hot_frac is not None
+                else self.server_cfg.placement_hot_frac)
+        if not 0.0 < frac <= 1.0:
+            raise ValueError(f"hot_frac={frac} must be in (0, 1]")
+        k = max(1, int(round(frac * len(profile))))
+        hot = np.argsort(profile, kind="stable")[::-1][:k]
+        mask = np.zeros(len(profile), bool)
+        mask[hot[profile[hot] > 0]] = True
+        delta = self.store.set_replicated(mask)
+        delta["hot_pages"] = int(mask.sum())
+        return delta
+
     def _tenant_map(self, queries: np.ndarray,
                     tenants: Optional[np.ndarray]) -> np.ndarray:
         """Validate and normalize the query-pool -> tenant mapping. Ids must
@@ -567,10 +620,17 @@ class AnnServer:
             return {}
         rows = {t: {"cache_hit_rate": round(r, 4)}
                 for t, r in self.store.tenant_hit_rates().items()}
-        cache = getattr(self.store, "cache", None)   # sharded stores keep
-        if getattr(cache, "tenant_aware", False):    # per-shard caches
+        cache = getattr(self.store, "cache", None)
+        if getattr(cache, "tenant_aware", False):
             for t, cap in enumerate(cache.capacities()):
                 rows.setdefault(t, {})["cache_pages"] = cap
+        else:
+            # sharded stores keep per-shard caches; when those are tenant-
+            # partitioned, report each tenant's capacity summed over shards
+            caps = getattr(self.store, "tenant_capacities", lambda: None)()
+            if caps is not None:
+                for t, cap in enumerate(caps):
+                    rows.setdefault(t, {})["cache_pages"] = cap
         return rows
 
     def _per_tenant_report(self, tenant_ids, lat_arr,
@@ -593,7 +653,14 @@ class AnnServer:
             out.setdefault(t, {"completed": 0}).update(row)
         return out
 
-    def _batch_times_us(self, stats: QueryStats, depth: int, d: int):
+    def _shard_window(self, store=None) -> _ShardWindow:
+        """A fresh per-run shard aggregation window over `store` (default:
+        the server's own store) — fleet replicas pass their own."""
+        return _ShardWindow(store or self.store, self.server_cfg.shards,
+                            self.model, self.cfg.page_bytes)
+
+    def _batch_times_us(self, stats: QueryStats, depth: int, d: int,
+                        store=None, lift: Optional[Tuple[int, int]] = None):
         """Per-query service latencies for one batch at the given device
         queue depth, plus the batch's I/O accounting dict. With a stateful
         policy the accounting is a trace replay against the shared cache
@@ -602,14 +669,21 @@ class AnnServer:
         store additionally splits each query's charged pages by shard
         (trace replay against the per-shard caches, or the per-shard
         union), and the device time becomes the max over per-shard
-        completion times at per-shard queue depths."""
+        completion times at per-shard queue depths.
+
+        `store` overrides the server's own store (a fleet replica replays
+        against ITS copy); `lift=(r, R)` lifts the shard split onto the
+        fleet's (B, R, S) replica grid — this batch's pages on replica r's
+        row, zero elsewhere — so the device time is priced by the model's
+        max-over-replicas-then-shards path."""
+        store = store if store is not None else self.store
         if self._stateful:
-            acct = self.store.replay_batch(stats.page_trace,
-                                           tenants=stats.tenants)
+            acct = store.replay_batch(stats.page_trace,
+                                      tenants=stats.tenants)
             pages = acct["per_query_issued"]
             dedup, overlap = 1.0, acct["overlap_frac"]
         else:
-            acct = self.store.coalesce(stats.visited_pages)
+            acct = store.coalesce(stats.visited_pages)
             acct.setdefault("hits", 0)
             acct["overlap_frac"] = overlap = 0.0
             requested, issued = acct["requested"], acct["issued"]
@@ -618,6 +692,20 @@ class AnnServer:
             # is charged its DISTINCT pages (step revisits are buffer hits),
             # scaled by the coalescing rebate: charges sum to the union
             pages = stats.visited_pages.sum(axis=1).astype(np.float64)
+        sp = acct.get("per_query_shard_pages")
+        sd = acct.get("shard_depths")
+        if lift is not None:
+            r, R = lift
+            if sp is None:
+                # unsharded replica: its whole device is one (r, s) cell
+                sp = np.asarray(pages, np.float64)[:, None]
+                sd = np.asarray([depth], np.float64)
+            S = sp.shape[1]
+            grid = np.zeros((len(sp), R, S), np.float64)
+            grid[:, r, :] = sp
+            depths = np.zeros((R, S), np.float64)
+            depths[r] = np.asarray(sd, np.float64)
+            sp, sd = grid, depths
         lat = self.model.concurrent_latency_us(
             depth,
             hops=stats.hops.astype(np.float64),
@@ -628,8 +716,7 @@ class AnnServer:
             d=d, pq_m=self.cfg.pq_m, page_bytes=self.cfg.page_bytes,
             pipeline=self.cfg.pipeline, page_dedup=dedup,
             prefetch_overlap=overlap,
-            shard_pages=acct.get("per_query_shard_pages"),
-            shard_depths=acct.get("shard_depths"))
+            shard_pages=sp, shard_depths=sd)
         return np.asarray(lat, np.float64), acct
 
     # -- closed loop ---------------------------------------------------------
@@ -668,7 +755,7 @@ class AnnServer:
         service_out, batch_sizes, tenant_out = [], [], []
         requested_total = issued_total = hits_total = 0
         overlap_w = 0.0
-        shard_win = _ShardWindow(self)
+        shard_win = self._shard_window()
         t_end = 0.0
 
         while events:
@@ -744,7 +831,8 @@ class AnnServer:
     def _empty_open_report(self, rate_qps: float, duration_us: float,
                            ac: AdmissionController,
                            per_tenant: Optional[dict],
-                           extra: Optional[dict] = None) -> OpenLoopReport:
+                           extra: Optional[dict] = None,
+                           seed: Optional[int] = None) -> OpenLoopReport:
         """Report for a run that completed nothing (no arrivals, or every
         arrival shed) — no kernel compile is paid. `extra` carries the
         mutation-outcome fields of an all-mutation window."""
@@ -766,14 +854,15 @@ class AnnServer:
             query_indices=np.zeros(0, np.int64),
             offered_qps=ac.offered / (duration_us * 1e-6),
             admitted=ac.admitted, shed=ac.shed, degraded=0,
-            per_tenant=per_tenant, **(extra or {}))
+            per_tenant=per_tenant, seed=seed, **(extra or {}))
 
     def serve_open_loop(self, queries: np.ndarray, rate_qps: float,
                         duration_us: float, seed: int = 0,
                         tenants: Optional[np.ndarray] = None,
                         arrivals: Optional[np.ndarray] = None,
                         mutation_mix: Optional[MutationMix] = None,
-                        insert_pool: Optional[np.ndarray] = None
+                        insert_pool: Optional[np.ndarray] = None,
+                        rng: Optional[np.random.Generator] = None
                         ) -> OpenLoopReport:
         """Poisson arrivals at `rate_qps` for `duration_us` of virtual time,
         query vectors drawn round-robin. Arrivals do not wait for
@@ -800,6 +889,14 @@ class AnnServer:
         oldest enqueued query's remaining budget (SLO minus the estimated
         batch service time) runs out — trading batch-size efficiency for
         tail latency exactly when the SLO is at risk.
+
+        ONE seeded rng drives the whole run: the Poisson arrivals, the
+        mutation-mix arrival kinds AND the delete-victim draws all come
+        from `np.random.default_rng(seed)` (`MutationMix.seed` is ignored),
+        so a single seed reproduces a streaming run end to end and is
+        stamped into `OpenLoopReport.row()`. Pass `rng=` to share a
+        generator across calls (e.g. a multi-epoch trace replay); the
+        stamped seed is then the caller's to report.
 
         `mutation_mix` (repro/mutation/compactor.py: MutationMix) opens the
         STREAMING workload: each arrival is independently a read (served as
@@ -838,14 +935,17 @@ class AnnServer:
         tenant_of = self._tenant_map(queries, tenants)
         multi_tenant = tenants is not None or scfg.tenants > 1
 
+        # one generator for arrivals, arrival kinds and delete victims —
+        # the single source of randomness the stamped seed reproduces
+        gen = rng if rng is not None else np.random.default_rng(seed)
+        run_seed = None if rng is not None else int(seed)
         if arrivals is None:
-            rng = np.random.default_rng(seed)
             mean_gap = 1e6 / rate_qps
             times: List[float] = []
-            t = float(rng.exponential(mean_gap))
+            t = float(gen.exponential(mean_gap))
             while t < duration_us:
                 times.append(t)
-                t += float(rng.exponential(mean_gap))
+                t += float(gen.exponential(mean_gap))
             arr = np.asarray(times)
         else:
             arr = np.asarray(arrivals, np.float64).reshape(-1)
@@ -858,16 +958,14 @@ class AnnServer:
             per_tenant = (self._per_tenant_report([], np.zeros(0), ac)
                           if multi_tenant else None)
             return self._empty_open_report(rate_qps, duration_us, ac,
-                                           per_tenant)
+                                           per_tenant, seed=run_seed)
         # arrival kinds: 0 = read, 1 = insert, 2 = delete. Reads index the
         # query pool round-robin BY READ ORDER, so a mutating mix serves
         # the same read sequence a pure-read run would
         if mm is not None:
-            rng_m = np.random.default_rng(mm.seed)
-            kinds = rng_m.choice(
+            kinds = gen.choice(
                 3, size=n, p=[mm.read_frac, mm.insert_frac, mm.delete_frac])
         else:
-            rng_m = None
             kinds = np.zeros(n, np.int64)
         reads = kinds == 0
         n_reads = int(reads.sum())
@@ -890,7 +988,7 @@ class AnnServer:
         qidx_out, tenant_out = [], []
         requested_total = issued_total = hits_total = 0
         overlap_w = 0.0
-        shard_win = _ShardWindow(self)
+        shard_win = self._shard_window()
         degraded_n = 0
         t_end = 0.0
 
@@ -920,7 +1018,7 @@ class AnnServer:
                 mu["inserts"] += 1
                 bg_run(self.index.maybe_flush(), t, "flushes")
             else:
-                vid = self.index.random_live_vid(rng_m)
+                vid = self.index.random_live_vid(gen)
                 if vid is not None and self.index.delete(vid):
                     mu["deletes"] += 1
             bg_run(compactor.after_mutation(), t, "compactions")
@@ -1005,7 +1103,8 @@ class AnnServer:
                       if multi_tenant else None)
         if completed == 0:
             return self._empty_open_report(rate_qps, duration_us, ac,
-                                           per_tenant, extra=mut_kw)
+                                           per_tenant, extra=mut_kw,
+                                           seed=run_seed)
         all_stats = QueryStats.concat(stats_out)
         lat_arr = np.asarray(lat_out)
         slo = scfg.slo_p99_us
@@ -1030,4 +1129,4 @@ class AnnServer:
             offered_qps=n_reads / (duration_us * 1e-6),
             admitted=ac.admitted, shed=ac.shed, degraded=degraded_n,
             per_tenant=per_tenant, per_shard=shard_win.report(t_end),
-            **mut_kw)
+            seed=run_seed, **mut_kw)

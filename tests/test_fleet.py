@@ -1,0 +1,275 @@
+"""Fleet layer (repro/serving/fleet.py): replica groups over the sharded
+store — config validation, least-work routing + goodput scaling, result
+fidelity, hot-page migration, hysteresis autoscaling, per-replica
+admission budgets, one-seed reproducibility of a full streaming fleet
+run, and the FleetReport row-schema stability contract.
+
+Config validation is `-m fast`; everything else serves real queries over
+the session-scoped `base_index` fixture in virtual time."""
+import numpy as np
+import pytest
+
+from repro.core import get_preset
+from repro.mutation import MutableIndex, MutationConfig, MutationMix
+from repro.serving import (AutoscaleConfig, FleetConfig, FleetServer,
+                           MigrationConfig, ServerConfig)
+
+L = 32
+
+
+def _fleet(idx, groups=2, shards=2, migration=None, autoscale=None,
+           budget=0.0, routing="least-work", cache_pages=64, **scfg_kw):
+    scfg = ServerConfig(
+        max_batch=8, shards=shards, cache_policy="lru",
+        cache_bytes=cache_pages * idx.layout.page_bytes, prefetch=1,
+        **scfg_kw)
+    return FleetServer(idx, get_preset("baseline", L=L), server_cfg=scfg,
+                       fleet_cfg=FleetConfig(
+                           replica_groups=groups, routing=routing,
+                           replica_budget_qps=budget, migration=migration,
+                           autoscale=autoscale))
+
+
+# --- config validation (fast) ------------------------------------------------
+
+
+@pytest.mark.fast
+@pytest.mark.parametrize("kw,msg", [
+    (dict(replica_groups=0), "replica_groups=0"),
+    (dict(routing="random"), "routing='random'"),
+    (dict(replica_budget_qps=-1.0), "replica_budget_qps=-1.0"),
+    (dict(migration=3), "must be a MigrationConfig"),
+    (dict(autoscale="yes"), "must be an AutoscaleConfig"),
+    (dict(replica_groups=9, autoscale=AutoscaleConfig(max_groups=4)),
+     "above"),
+])
+def test_fleet_config_rejects_invalid(kw, msg):
+    with pytest.raises(ValueError, match=msg):
+        FleetConfig(**kw)
+
+
+@pytest.mark.fast
+def test_migration_autoscale_config_validation():
+    with pytest.raises(ValueError, match="every_us=0"):
+        MigrationConfig(every_us=0)
+    with pytest.raises(ValueError, match="hot_frac=1.5"):
+        MigrationConfig(hot_frac=1.5)
+    with pytest.raises(ValueError, match="max_moves=0"):
+        MigrationConfig(max_moves=0)
+    with pytest.raises(ValueError, match="min_reads=0"):
+        MigrationConfig(min_reads=0)
+    with pytest.raises(ValueError, match="check_every_us=0"):
+        AutoscaleConfig(check_every_us=0)
+    with pytest.raises(ValueError, match="hysteresis band"):
+        AutoscaleConfig(util_low=0.8, util_high=0.5)
+    with pytest.raises(ValueError, match="min_groups=0"):
+        AutoscaleConfig(min_groups=0)
+    with pytest.raises(ValueError, match="max_groups=1 < min_groups=2"):
+        AutoscaleConfig(min_groups=2, max_groups=1)
+
+
+# --- serving behaviour -------------------------------------------------------
+
+
+def test_fleet_results_match_facade(base_index, small_dataset):
+    """Routing across replica groups must not change per-query results:
+    the fleet returns exactly what DiskIndex.search returns (the groups
+    share the same bytes; only I/O accounting is per-group)."""
+    srv = _fleet(base_index, groups=3)
+    rep = srv.serve_fleet(small_dataset.queries, rate_qps=100_000,
+                          duration_us=4_000, seed=2)
+    want = base_index.search(small_dataset.queries,
+                             get_preset("baseline", L=L))
+    np.testing.assert_array_equal(rep.stats.ids,
+                                  want.ids[rep.query_indices])
+    # every group served something under least-work routing at this load
+    assert all(r["completed"] > 0 for r in rep.per_replica.values())
+
+
+def test_fleet_goodput_scales_with_groups(base_index, small_dataset):
+    """Acceptance: saturation goodput rises monotonically with the group
+    count at fixed shards — more copies, more concurrent devices."""
+    qps = []
+    for g in (1, 2, 4):
+        srv = _fleet(base_index, groups=g)
+        rep = srv.serve_fleet(small_dataset.queries, rate_qps=300_000,
+                              duration_us=2_000, seed=2)
+        qps.append(rep.qps)
+        # (group x shard) device cells all reported
+        assert len(rep.per_shard) == g * 2
+    assert qps[0] < qps[1] < qps[2], qps
+
+
+def test_fleet_least_work_beats_round_robin_tail(base_index,
+                                                 small_dataset):
+    """Least-outstanding-work routing never loses to blind rotation on
+    p99 at saturation (it fills the idlest group's queue first)."""
+    reps = {}
+    for routing in ("least-work", "round-robin"):
+        srv = _fleet(base_index, groups=2, routing=routing)
+        reps[routing] = srv.serve_fleet(
+            small_dataset.queries, rate_qps=100_000, duration_us=2_000,
+            seed=2)
+    assert (reps["least-work"].p99_latency_us
+            <= reps["round-robin"].p99_latency_us * 1.01)
+
+
+def test_migration_moves_pages_not_results(base_index, small_dataset):
+    """Online hot-page migration: the rebalancer promotes pages read in
+    the serving window, bills real copy I/O, and never changes search
+    results (same seed, migration on vs off -> identical ids)."""
+    mig = MigrationConfig(every_us=400.0, hot_frac=0.2, max_moves=32)
+    on = _fleet(base_index, groups=2, migration=mig).serve_fleet(
+        small_dataset.queries, rate_qps=50_000, duration_us=4_000, seed=4)
+    off = _fleet(base_index, groups=2).serve_fleet(
+        small_dataset.queries, rate_qps=50_000, duration_us=4_000, seed=4)
+    assert on.migrations >= 1 and on.promoted_pages > 0
+    # each promoted page: one home read, one copy written per other shard
+    assert on.mig_pages_written == on.mig_pages_read * (2 - 1)
+    assert on.mig_io_us > 0.0
+    np.testing.assert_array_equal(on.stats.ids, off.stats.ids)
+
+
+def test_migration_hot_set_lives_on_stores(base_index, small_dataset):
+    mig = MigrationConfig(every_us=400.0, hot_frac=0.2, max_moves=32)
+    srv = _fleet(base_index, groups=2, migration=mig)
+    srv.serve_fleet(small_dataset.queries, rate_qps=50_000,
+                    duration_us=4_000, seed=4)
+    assert all(r.store.placement.replicated.any() for r in srv.replicas)
+
+
+def test_autoscale_adds_on_ramp_drains_after(base_index, small_dataset):
+    """Hysteresis: a dense burst then a sparse tail — the fleet must add
+    groups under the burst and drain-before-drop in the tail, never
+    below min_groups."""
+    arrivals = np.concatenate([
+        np.linspace(0.0, 3_000.0, 400),          # ~133k qps burst
+        np.linspace(3_100.0, 30_000.0, 30)])     # ~1k qps tail
+    asc = AutoscaleConfig(check_every_us=500.0, util_high=0.6,
+                          util_low=0.2, min_groups=1, max_groups=4)
+    srv = _fleet(base_index, groups=1, autoscale=asc)
+    rep = srv.serve_fleet(small_dataset.queries, rate_qps=10_000,
+                          duration_us=30_000.0, seed=2,
+                          arrivals=arrivals)
+    assert rep.groups_added >= 1, rep.timeline
+    assert rep.groups_dropped >= 1, rep.timeline
+    assert rep.groups_final >= asc.min_groups
+    events = [s[3] for s in rep.timeline]
+    assert "add" in events and "drain" in events
+    # drain-before-drop: a drained group still completed its work — no
+    # query vanished
+    assert rep.completed == rep.admitted
+
+
+def test_replica_budget_sheds(base_index, small_dataset):
+    srv = _fleet(base_index, groups=2, budget=5_000.0)
+    rep = srv.serve_fleet(small_dataset.queries, rate_qps=100_000,
+                          duration_us=3_000, seed=2)
+    assert rep.shed_budget > 0
+    assert rep.shed >= rep.shed_budget
+    assert rep.offered == rep.completed + rep.shed
+    unbudgeted = _fleet(base_index, groups=2).serve_fleet(
+        small_dataset.queries, rate_qps=100_000, duration_us=3_000,
+        seed=2)
+    assert unbudgeted.shed_budget == 0 and unbudgeted.shed == 0
+
+
+def test_one_seed_reproduces_streaming_fleet_run(base_index,
+                                                 small_dataset):
+    """Satellite: ONE seed drives arrivals + mutation kinds + delete
+    victims across the whole fleet — two runs at the same seed are
+    row-identical (and the seed is stamped); a different seed diverges."""
+    mix = MutationMix(insert_frac=0.1, delete_frac=0.05,
+                      compaction="threshold", threshold=0.2, max_pages=8)
+    pool = small_dataset.vectors[:64]
+
+    def run(seed):
+        mi = MutableIndex(base_index, MutationConfig(
+            flush_threshold=16, growth_chunk=128, insert_L=16,
+            compaction_pages=8))
+        srv = _fleet(mi, groups=2)
+        return srv.serve_fleet(small_dataset.queries, rate_qps=30_000,
+                               duration_us=3_000, seed=seed,
+                               mutation_mix=mix, insert_pool=pool)
+
+    a, b, c = run(9), run(9), run(10)
+    assert a.row() == b.row()
+    assert a.seed == 9
+    assert a.inserts > 0 and a.row() != c.row()
+
+
+def test_mutations_invalidate_every_group(base_index, small_dataset):
+    """A flush rewrites pages in every group's copy: all replica stores
+    are attached to the shared MutableIndex, and background I/O lands on
+    every group's clock (bg_io_us sums the per-group device time)."""
+    mi = MutableIndex(base_index, MutationConfig(
+        flush_threshold=8, growth_chunk=128, insert_L=16,
+        compaction_pages=8))
+    srv = _fleet(mi, groups=2)
+    rep = srv.serve_fleet(
+        small_dataset.queries, rate_qps=30_000, duration_us=3_000,
+        seed=1, mutation_mix=MutationMix(insert_frac=0.3),
+        insert_pool=small_dataset.vectors[:64])
+    assert rep.flushes >= 1
+    assert rep.bg_io_us > 0.0
+    versions = [r.store.page_version.max() for r in srv.replicas]
+    assert all(v > 0 for v in versions)          # every copy invalidated
+
+
+# --- FleetReport row schema (satellite: stability under replica groups) ------
+
+
+EXPECTED_BASE_COLS = [
+    "rate_qps", "offered", "offered_qps", "qps", "admitted", "shed",
+    "degraded", "mean_latency_us", "p99_latency_us", "mean_batch",
+    "pages_per_query", "issued_pages_per_query", "cache_hit_rate",
+    "overlap_frac", "slo_violation_frac", "seed", "shards",
+    "shard_imbalance", "max_shard_util", "groups", "groups_final",
+    "groups_added", "groups_dropped", "migrations", "promoted_pages",
+    "mig_pages_written", "shed_budget"]
+
+
+def test_fleet_row_schema_stable_under_groups(base_index, small_dataset):
+    """The row() contract downstream tables key on: fixed column names in
+    a fixed order, with exactly one r<N>_completed/r<N>_util pair added
+    per replica group — growing the fleet appends columns, never renames
+    or reorders the shared prefix."""
+    def cols(groups):
+        rep = _fleet(base_index, groups=groups).serve_fleet(
+            small_dataset.queries, rate_qps=30_000, duration_us=2_000,
+            seed=2)
+        return list(rep.row().keys())
+
+    c2 = cols(2)
+    assert c2 == EXPECTED_BASE_COLS + ["r0_completed", "r0_util",
+                                       "r1_completed", "r1_util"]
+    c3 = cols(3)
+    assert c3[:len(EXPECTED_BASE_COLS)] == EXPECTED_BASE_COLS
+    assert c3 == EXPECTED_BASE_COLS + ["r0_completed", "r0_util",
+                                       "r1_completed", "r1_util",
+                                       "r2_completed", "r2_util"]
+
+
+def test_fleet_row_tenant_columns_keep_their_slot(base_index,
+                                                  small_dataset):
+    """With tenants on, the t<N>_* triplets slot between `seed` and the
+    shard columns — same names, same position, regardless of how many
+    replica groups serve them."""
+    tenant_of = np.arange(len(small_dataset.queries)) % 2
+
+    def cols(groups):
+        rep = _fleet(base_index, groups=groups,
+                     tenants=2).serve_fleet(
+            small_dataset.queries, rate_qps=30_000, duration_us=2_000,
+            seed=2, tenants=tenant_of)
+        return list(rep.row().keys())
+
+    c2, c3 = cols(2), cols(3)
+    at = EXPECTED_BASE_COLS.index("seed") + 1
+    tenant_cols = ["t0_completed", "t0_shed", "t0_p99_latency_us",
+                   "t1_completed", "t1_shed", "t1_p99_latency_us"]
+    assert c2[at:at + len(tenant_cols)] == tenant_cols
+    assert c3[at:at + len(tenant_cols)] == tenant_cols
+    # groups only ever APPEND r<N>_* columns at the tail
+    assert c3[:len(c2)] == c2
+    assert c3[len(c2):] == ["r2_completed", "r2_util"]

@@ -137,10 +137,6 @@ def test_closed_loop_rejects_bad_workers_and_rounds(base_index,
     (dict(slo_p99_us=0.0), "slo_p99_us=0.0"),
     (dict(shards=0), "shards=0"),
     (dict(placement="hash"), "placement='hash'"),
-    (dict(shards=2, cache_policy="lru", cache_bytes=1 << 20, prefetch=1),
-     "does not compose with prefetch"),
-    (dict(shards=2, tenants=2, cache_policy="lru", cache_bytes=1 << 20),
-     "does not compose with"),
     (dict(placement="contiguous"), "with shards=1 places nothing"),
     (dict(placement_hot_frac=0.0), "placement_hot_frac=0.0"),
 ])

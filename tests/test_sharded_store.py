@@ -189,12 +189,18 @@ def test_build_store_shard_surface(tiny_layout):
     assert isinstance(one, BatchedPageStore)     # no sharding wrapper
     with pytest.raises(ValueError, match="shards=0"):
         build_store(tiny_layout, shards=0)
-    with pytest.raises(ValueError, match="look-ahead"):
-        build_store(tiny_layout, shards=2, cache_policy="lru",
-                    cache_bytes=8 * tiny_layout.page_bytes, prefetch=1)
-    with pytest.raises(ValueError, match="tenant-partitioned"):
-        build_store(tiny_layout, shards=2, cache_policy="lru",
-                    cache_bytes=8 * tiny_layout.page_bytes, tenants=2)
+    # shards x prefetch and shards x tenants COMPOSE (PR 7): look-ahead
+    # hops land in the owning shard's cache, tenant partitions split each
+    # shard's slice
+    pf = build_store(tiny_layout, batched=True, shards=2,
+                     cache_policy="lru",
+                     cache_bytes=8 * tiny_layout.page_bytes, prefetch=1)
+    assert isinstance(pf, ShardedPageStore) and pf.lookahead == 1
+    tn = build_store(tiny_layout, batched=True, shards=2,
+                     cache_policy="lru",
+                     cache_bytes=8 * tiny_layout.page_bytes, tenants=2)
+    assert isinstance(tn, ShardedPageStore) and tn.tenant_aware
+    assert tn.tenant_capacities() == [4, 4]      # 8 pages x 2 shards cells
     with pytest.raises(ValueError, match="needs a per-page access"):
         build_store(tiny_layout, shards=2, placement="replicated")
 
@@ -285,3 +291,101 @@ def test_shard_latency_validation():
             4, pages=np.array([1.0]),
             shard_pages=np.zeros((1, 4)), shard_depths=np.array([1, 1]),
             **_lat_kw())
+
+
+# --- PR 7 composition + fleet store surfaces ---------------------------------
+
+
+def test_shard_prefetch_composition_accounts(tiny_layout):
+    """shards x prefetch: look-ahead pages land in the OWNING shard's
+    cache and the conservation identity picks up the prefetch term."""
+    store = build_store(tiny_layout, batched=True, shards=2,
+                        cache_policy="lru",
+                        cache_bytes=8 * tiny_layout.page_bytes, prefetch=1)
+    acct = store.replay_batch(_trace([0, 1], [2, 3], [4, 5]))
+    assert acct["prefetch_issued"] > 0
+    assert 0.0 < acct["overlap_frac"] <= 1.0
+    assert acct["shard_issued"].sum() == acct["issued"]
+    c = store.counters
+    assert c.pages_fetched == (c.pages_requested - c.cache_hits
+                               + store.prefetch_issued)
+
+
+def test_profile_from_counters_online_seeding(tiny_layout):
+    """The online twin of profile_from_trace: live per-page read counts
+    off a sharded store seed a replicated placement with no offline
+    trace; non-sharded stores are rejected with a pointer to the
+    offline path."""
+    from repro.io import profile_from_counters
+    store = build_store(tiny_layout, batched=True, shards=2)
+    store.replay_batch(_trace([0, 1], [0, 2]))
+    prof = profile_from_counters(store)
+    assert prof.sum() == store.counters.pages_fetched
+    assert prof[0] == 2 and prof[3] == 0
+    # it is a copy — the live counters keep counting independently
+    store.replay_batch(_trace([0]))
+    assert profile_from_counters(store)[0] == 3 and prof[0] == 2
+    # good enough to build the placement that needed a profile
+    assert make_placement("replicated", tiny_layout.num_pages, 2,
+                          profile=prof, hot_pages=1).replicated[0]
+    plain = build_store(tiny_layout, batched=True)
+    with pytest.raises(ValueError, match="live per-page read counts"):
+        profile_from_counters(plain)
+
+
+def test_set_replicated_swaps_hot_set_in_place(tiny_layout):
+    """Migration's store half: the replicated mask swaps without moving
+    homes, reporting exactly the promoted/demoted delta."""
+    store = build_store(tiny_layout, batched=True, shards=2)
+    homes = store.placement.page_to_shard.copy()
+    m1 = np.zeros(tiny_layout.num_pages, bool)
+    m1[[0, 1]] = True
+    d1 = store.set_replicated(m1)
+    assert d1["promoted"].tolist() == [0, 1]
+    assert d1["demoted"].tolist() == []
+    m2 = np.zeros(tiny_layout.num_pages, bool)
+    m2[[1, 2]] = True
+    d2 = store.set_replicated(m2)
+    assert d2["promoted"].tolist() == [2]
+    assert d2["demoted"].tolist() == [0]
+    np.testing.assert_array_equal(store.placement.page_to_shard, homes)
+    assert store.placement.replicated.sum() == 2
+    with pytest.raises(ValueError, match="entries for"):
+        store.set_replicated(np.ones(3, bool))
+
+
+def test_replica_latency_lifts_and_maxes():
+    """The fleet's (B, R, S) device grid: a single replica lifted to 3-D
+    prices identically to the 2-D path, and at equal total pages an
+    imbalanced replica split is strictly slower (max over replicas THEN
+    shards)."""
+    m = SSDModel()
+    flat = m.concurrent_latency_us(
+        4, pages=np.array([8.0]),
+        shard_pages=np.array([[6.0, 2.0]]),
+        shard_depths=np.array([4, 4]), **_lat_kw())
+    lifted = m.concurrent_latency_us(
+        4, pages=np.array([8.0]),
+        shard_pages=np.array([[[6.0, 2.0]]]),
+        shard_depths=np.array([[4, 4]]), **_lat_kw())
+    np.testing.assert_allclose(lifted, flat)
+    depths = np.array([[4], [4]])
+    balanced = m.concurrent_latency_us(
+        4, pages=np.array([8.0]),
+        shard_pages=np.array([[[4.0], [4.0]]]),
+        shard_depths=depths, **_lat_kw())
+    imbalanced = m.concurrent_latency_us(
+        4, pages=np.array([8.0]),
+        shard_pages=np.array([[[8.0], [0.0]]]),
+        shard_depths=depths, **_lat_kw())
+    assert float(imbalanced[0]) > float(balanced[0])
+    with pytest.raises(ValueError, match="shard_pages must be"):
+        m.concurrent_latency_us(
+            4, pages=np.array([1.0]),
+            shard_pages=np.zeros((1, 2, 2, 2)),
+            shard_depths=np.zeros((2, 2)), **_lat_kw())
+    with pytest.raises(ValueError, match="shard_depths must be"):
+        m.concurrent_latency_us(
+            4, pages=np.array([1.0]),
+            shard_pages=np.zeros((1, 2, 2)),
+            shard_depths=np.array([1, 1]), **_lat_kw())
