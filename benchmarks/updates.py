@@ -32,11 +32,31 @@ windows):
                     each page's home shard, so compaction is visible in
                     the same per-device utilization column as query reads.
 
+The second sweep prices DURABILITY (repro/mutation/journal.py): the same
+streaming cell run over a journal-equipped index, group-commit batch x
+snapshot cadence. Read it as the write-amplification budget of crash
+safety:
+  journal_writes    journal pages committed during the window, billed at
+                    the write unit on the background device clock (so a
+                    per-op-sync journal visibly taxes goodput at high
+                    mutation rates; group commit amortizes it)
+  snap_pages        pages a snapshot() checkpoint cost after the window
+                    (0 on non-checkpoint windows) — the cadence trade:
+                    frequent snapshots keep recovery short but pay the
+                    full-image write each time
+Each durability cell ends with a kill/recover acceptance guard: the live
+index is dropped, `recover()` rebuilds it from the journal (plus the last
+snapshot when the cadence took one), and the probe sweep must return
+BIT-IDENTICAL results — printed as [recovery OK]. Journal/snapshot writes
+are also audited down the server store's conservation spine
+(pages_written == data + journal + snapshot at every layer).
+
 Env knobs (dataset sizing in benchmarks/common.py):
   REPRO_UP_DURATION   window length in us of virtual time (default 30000)
   REPRO_UP_WINDOWS    serving windows per cell            (default 4)
   REPRO_UP_RATE       offered arrival rate in qps         (default 8000)
   REPRO_UP_SHARDS     devices                             (default 2)
+  REPRO_UP_DURABILITY durability sweep: 1 on, 0 off       (default 1)
 """
 from __future__ import annotations
 
@@ -46,16 +66,20 @@ import numpy as np
 
 from benchmarks import common
 from repro.core import get_preset
-from repro.mutation import MutableIndex, MutationConfig, MutationMix
+from repro.mutation import (JournalConfig, MutableIndex, MutationConfig,
+                            MutationJournal, MutationMix, recover)
 from repro.serving import AnnServer, ServerConfig
 
 DURATION_US = float(os.environ.get("REPRO_UP_DURATION", 30000.0))
 WINDOWS = int(os.environ.get("REPRO_UP_WINDOWS", 4))
 RATE = float(os.environ.get("REPRO_UP_RATE", 8000.0))
 SHARDS = int(os.environ.get("REPRO_UP_SHARDS", 2))
+DURABILITY = os.environ.get("REPRO_UP_DURABILITY", "1") != "0"
 SYSTEM = "pageshuffle"          # high build-time overlap: decay is visible
 L = 32
 POLICIES = ("none", "threshold", "continuous")
+GROUP_COMMITS = (1, 8)          # per-op sync vs. amortized commit
+SNAP_CADENCES = (0, 2)          # snapshot() every N windows (0 = never)
 
 
 def insert_pool(vectors: np.ndarray, size: int = 1024,
@@ -123,6 +147,66 @@ def run_cell(name: str, insert_frac: float, policy: str,
     return rows, overlaps, pph
 
 
+def _audit_write_spine(store) -> bool:
+    """pages_written == data + journal + snapshot at every layer of the
+    server's store stack (the conservation invariant the durability layer
+    bills through)."""
+    layer, ok = store, True
+    while layer is not None:
+        c = layer.counters
+        ok &= (c.pages_written
+               == c.data_writes + c.journal_writes + c.snapshot_writes)
+        layer = getattr(layer, "inner", None)
+    return ok
+
+
+def run_durability_cell(name: str, group_commit: int, snap_every: int,
+                        insert_frac: float = 0.3, preset: str = SYSTEM):
+    """One durable streaming cell: the `threshold` policy cell re-run over
+    a journal-equipped index, checkpointed every `snap_every` windows,
+    ending with the kill/recover acceptance probe."""
+    ds = common.dataset(name)
+    cfg = get_preset(preset, L=L)
+    idx = common.index(name, preset)
+    mcfg = MutationConfig(flush_threshold=32, growth_chunk=512, insert_L=L)
+    jrn = MutationJournal(JournalConfig(group_commit=group_commit))
+    mi = MutableIndex(idx, mcfg, journal=jrn)
+    srv = AnnServer(mi, cfg, common.MODEL,
+                    ServerConfig(max_batch=16, shards=SHARDS))
+    mix = MutationMix(insert_frac=insert_frac,
+                      delete_frac=insert_frac / 4,
+                      compaction="threshold", threshold=0.15, max_pages=16)
+    pool = insert_pool(ds.vectors)
+    rows, snap = [], None
+    for w in range(WINDOWS):
+        rep = srv.serve_open_loop(ds.queries, rate_qps=RATE,
+                                  duration_us=DURATION_US, seed=w,
+                                  mutation_mix=mix, insert_pool=pool)
+        r = rep.row()
+        snap_pages = 0
+        if snap_every and (w + 1) % snap_every == 0:
+            snap = mi.snapshot()
+            snap_pages = snap["snapshot_pages"]
+        rows.append({
+            "dataset": name, "group_commit": group_commit,
+            "snap_every": snap_every, "window": w,
+            "qps": r["qps"], "p99_latency_us": r["p99_latency_us"],
+            "inserts": r.get("inserts", 0), "deletes": r.get("deletes", 0),
+            "journal_writes": r.get("journal_writes", 0),
+            "snap_pages": snap_pages, "bg_util": r.get("bg_util", 0.0),
+        })
+    # --- kill/recover acceptance: drop the live index, rebuild, re-probe
+    live_probe = mi.search(ds.queries, cfg)
+    live_or = mi.overlap_ratio()
+    spine_ok = _audit_write_spine(srv.store)
+    rec = recover(idx, jrn, mcfg, snapshot=snap)
+    rec_probe = rec.search(ds.queries, cfg)
+    ok = (np.array_equal(live_probe.ids, rec_probe.ids)
+          and np.array_equal(live_probe.dists, rec_probe.dists)
+          and rec.overlap_ratio() == live_or)
+    return rows, ok, spine_ok, rec.last_recovery_us
+
+
 def main(datasets=("sift-like",), insert_fracs=(0.3,)):
     all_rows = []
     for name in datasets:
@@ -158,7 +242,29 @@ def main(datasets=("sift-like",), insert_fracs=(0.3,)):
                       + ("   [recovers]" if rec else "   [NO recovery]")
                       + f", bg_util<= {bg:.4f} (the goodput cost)")
     common.print_table(all_rows)
-    return all_rows
+    if not DURABILITY:
+        return all_rows
+    # --- durability sweep: group-commit batch x snapshot cadence ----------
+    dur_rows = []
+    for name in datasets:
+        for gc in GROUP_COMMITS:
+            for snap_every in SNAP_CADENCES:
+                rows, ok, spine_ok, rec_us = run_durability_cell(
+                    name, gc, snap_every)
+                dur_rows.extend(rows)
+                jw = sum(r["journal_writes"] for r in rows)
+                print(f"# {name} durability gc={gc} snap_every={snap_every}"
+                      f": {jw} journal pages, recovery {rec_us:.0f}us"
+                      + ("   [recovery OK]" if ok
+                         else "   [RECOVERY MISMATCH — regression]")
+                      + ("" if spine_ok
+                         else "   [WRITE SPINE NOT CONSERVED]"))
+                if not (ok and spine_ok):
+                    raise SystemExit(
+                        "durability acceptance failed: recovered probe or "
+                        "write-conservation audit diverged")
+    common.print_table(dur_rows)
+    return all_rows + dur_rows
 
 
 if __name__ == "__main__":

@@ -64,7 +64,9 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.io.page_store import (StoreCounters, book_charged_reads,
-                                 charge_inner_reads, fetch_mirroring_inner)
+                                 book_writes, charge_inner_reads,
+                                 fetch_mirroring_inner, note_inner_writes,
+                                 resolve_write)
 
 
 class PageCache:
@@ -573,6 +575,14 @@ class SharedCachePageStore:
         page_ids = np.asarray(page_ids, np.int64).reshape(-1)
         book_charged_reads(self.counters, len(page_ids), self.layout.n_p)
         self.inner.charge(page_ids)
+
+    def note_write(self, page_ids=None, *, kind: str = "data",
+                   count: Optional[int] = None) -> None:
+        """Writes bypass the cache (invalidation is MutablePageStore's
+        job; the write itself is device traffic): book 1:1, forward down."""
+        pages, n = resolve_write(page_ids, count)
+        book_writes(self.counters, n, kind)
+        note_inner_writes(self.inner, pages, kind, n)
 
     # -- trace replay (the serving-path accounting) --------------------------
 

@@ -23,6 +23,12 @@ The contract (duck-typed; see PageStore Protocol):
                             each layer books it 1:1 and forwards down — the
                             conservation spine that keeps decorator counters
                             equal to inner movement on replay/coalesce paths
+  note_write(page_ids=, kind=, count=) — device page WRITES (data pages by
+                            id; journal/snapshot traffic count-only): each
+                            layer books 1:1 and forwards down, keeping
+                            pages_written == data_writes + journal_writes
+                            + snapshot_writes at every layer (the write
+                            half of the conservation spine)
   kernel_arrays() -> (page_vids, page_vecs, page_nbrs, vid2page, vid2slot)
   vertex_cache_mask() -> (n,) bool
   note_kernel_io(stats)   — fold kernel-measured reads/hits into counters
@@ -43,9 +49,12 @@ class StoreCounters:
     pages_fetched: int = 0     # pages actually charged to the device
     cache_hits: int = 0        # requests served from memory
     records_fetched: int = 0   # records moved (pages_fetched * n_p)
-    pages_written: int = 0     # pages rewritten in place (streaming updates:
-    #                            flush/compaction traffic, booked by the
-    #                            MutablePageStore layer only)
+    pages_written: int = 0     # total device page writes (the sum of the
+    #                            three kinds below — the write-conservation
+    #                            invariant every layer keeps)
+    data_writes: int = 0       # in-place page rewrites (flush/compaction)
+    journal_writes: int = 0    # write-ahead journal commits (sequential)
+    snapshot_writes: int = 0   # snapshot checkpoint pages (sequential)
 
     def reset(self) -> None:
         self.pages_requested = 0
@@ -53,6 +62,9 @@ class StoreCounters:
         self.cache_hits = 0
         self.records_fetched = 0
         self.pages_written = 0
+        self.data_writes = 0
+        self.journal_writes = 0
+        self.snapshot_writes = 0
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -82,6 +94,51 @@ def book_charged_reads(counters: StoreCounters, n_pages: int,
     counters.pages_requested += n_pages
     counters.pages_fetched += n_pages
     counters.records_fetched += n_pages * n_p
+
+
+#: StoreCounters per-kind write fields, keyed by note_write(kind=).
+WRITE_KINDS = ("data", "journal", "snapshot")
+
+
+def book_writes(counters: StoreCounters, n_pages: int, kind: str) -> None:
+    """Book `n_pages` device page writes of `kind` into `counters` — the
+    shared body of every layer's `note_write`, keeping the invariant
+    pages_written == data_writes + journal_writes + snapshot_writes at
+    each layer (the WRITE half of the conservation spine `charge` keeps
+    for reads)."""
+    if kind not in WRITE_KINDS:
+        raise ValueError(f"unknown write kind {kind!r}; one of "
+                         f"{WRITE_KINDS}")
+    counters.pages_written += n_pages
+    setattr(counters, f"{kind}_writes",
+            getattr(counters, f"{kind}_writes") + n_pages)
+
+
+def resolve_write(page_ids, count: Optional[int]) -> tuple:
+    """Normalize a note_write call: data writes name their pages
+    (`page_ids`), journal/snapshot writes are count-only sequential
+    traffic (`count=`). Returns (page_ids array or None, n_pages)."""
+    if count is not None:
+        if page_ids is not None:
+            raise ValueError("note_write takes page_ids OR count, not both")
+        if count < 0:
+            raise ValueError(f"count={count} must be >= 0")
+        return None, int(count)
+    if page_ids is None:
+        raise ValueError("note_write needs page_ids (data writes) or "
+                         "count= (sequential journal/snapshot writes)")
+    pages = np.asarray(list(page_ids), np.int64).reshape(-1)
+    return pages, len(pages)
+
+
+def note_inner_writes(inner, page_ids, kind: str, count: int) -> None:
+    """Forward a write booking down the spine, tolerating stores below a
+    legacy/foreign stack that carry no write books."""
+    if hasattr(inner, "note_write"):
+        if page_ids is not None:
+            inner.note_write(page_ids, kind=kind)
+        else:
+            inner.note_write(kind=kind, count=count)
 
 
 def charge_inner_reads(inner, page_ids) -> None:
@@ -156,6 +213,17 @@ class ArrayPageStore:
             raise IndexError("page id out of range")
         book_charged_reads(self.counters, len(page_ids), self.layout.n_p)
 
+    def note_write(self, page_ids=None, *, kind: str = "data",
+                   count: Optional[int] = None) -> None:
+        """Book device page writes at the bottom of the spine: data writes
+        name their (range-checked) pages, journal/snapshot writes are
+        count-only sequential traffic appended past the page space."""
+        pages, n = resolve_write(page_ids, count)
+        if pages is not None and len(pages) and (
+                pages.min() < 0 or pages.max() >= self.layout.num_pages):
+            raise IndexError("page id out of range")
+        book_writes(self.counters, n, kind)
+
     def kernel_arrays(self) -> tuple:
         if self._kernel_cache is None:
             lay = self.layout
@@ -222,6 +290,14 @@ class CachedPageStore:
         page_ids = np.asarray(page_ids, np.int64).reshape(-1)
         book_charged_reads(self.counters, len(page_ids), self.layout.n_p)
         self.inner.charge(page_ids)
+
+    def note_write(self, page_ids=None, *, kind: str = "data",
+                   count: Optional[int] = None) -> None:
+        """Write bookings pass the cache untouched (the vertex mask is a
+        READ shortcut): book 1:1 and forward down the spine."""
+        pages, n = resolve_write(page_ids, count)
+        book_writes(self.counters, n, kind)
+        note_inner_writes(self.inner, pages, kind, n)
 
     def kernel_arrays(self) -> tuple:
         return self.inner.kernel_arrays()
@@ -311,6 +387,14 @@ class BatchedPageStore:
         book_charged_reads(self.counters, len(page_ids), self.layout.n_p)
         self.inner.charge(page_ids)
 
+    def note_write(self, page_ids=None, *, kind: str = "data",
+                   count: Optional[int] = None) -> None:
+        """Writes never coalesce (each rewritten page is one device write
+        past any dedup decision): book 1:1 and forward down the spine."""
+        pages, n = resolve_write(page_ids, count)
+        book_writes(self.counters, n, kind)
+        note_inner_writes(self.inner, pages, kind, n)
+
     def kernel_arrays(self) -> tuple:
         return self.inner.kernel_arrays()
 
@@ -329,7 +413,8 @@ def build_store(layout, cached_vertices: Optional[np.ndarray] = None,
                 tenant_shares=None, rebalance_every: int = 0,
                 shards: int = 1, placement: str = "round-robin",
                 page_profile: Optional[np.ndarray] = None,
-                placement_hot_frac: float = 0.25, mutable: bool = False):
+                placement_hot_frac: float = 0.25, mutable: bool = False,
+                journal=None, crash=None):
     """Compose the store stack for an index. Bottom-up:
 
       ArrayPageStore                          (always — the simulated SSD)
@@ -375,7 +460,11 @@ def build_store(layout, cached_vertices: Optional[np.ndarray] = None,
     `mutable=True` wraps the finished stack in a `MutablePageStore`
     (repro/mutation/mutable_store.py): page-version tracking plus cache
     invalidation on rewrite, the store-side half of the streaming-update
-    subsystem. Every knob that only configures a subordinate layer is
+    subsystem. `journal=` (a repro.mutation.MutationJournal) arms its
+    two-phase write protocol — every data-page write is preceded by a
+    synced intent record — and `crash=` (a repro.mutation.CrashPoint)
+    injects a kill at a numbered I/O boundary; both require
+    `mutable=True` (a frozen stack never writes). Every knob that only configures a subordinate layer is
     validated here: a silently ignored `cache_bytes`/`tenant_shares`/
     `rebalance_every`/`placement` is an accounting bug waiting to be
     measured, so unsupported compositions raise one error naming the
@@ -448,7 +537,12 @@ def build_store(layout, cached_vertices: Optional[np.ndarray] = None,
                            rebalance_every=rebalance_every)
         store = (PrefetchingPageStore(store, cache, lookahead=prefetch)
                  if prefetch > 0 else SharedCachePageStore(store, cache))
+    if not mutable and (journal is not None or crash is not None):
+        raise ValueError(
+            "journal=/crash= configure the MutablePageStore's two-phase "
+            "write protocol — set mutable=True (a frozen stack never "
+            "writes, so there is nothing to journal or crash)")
     if mutable:
         from repro.mutation.mutable_store import MutablePageStore
-        store = MutablePageStore(store)
+        store = MutablePageStore(store, journal=journal, crash=crash)
     return store

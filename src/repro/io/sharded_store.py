@@ -75,7 +75,9 @@ import numpy as np
 from repro.io.page_cache import (POLICIES, PageCache, PartitionedPageCache,
                                  floor_capacity_pages)
 from repro.io.page_store import (StoreCounters, book_charged_reads,
-                                 charge_inner_reads, fetch_mirroring_inner)
+                                 book_writes, charge_inner_reads,
+                                 fetch_mirroring_inner, note_inner_writes,
+                                 resolve_write)
 
 #: build_store() / ServerConfig placement policy names.
 PLACEMENTS = ("round-robin", "contiguous", "replicated")
@@ -345,6 +347,25 @@ class ShardedPageStore:
             self.page_read_counts[int(p)] += 1
         book_charged_reads(self.counters, len(page_ids), n_p)
         self.inner.charge(page_ids)
+
+    def note_write(self, page_ids=None, *, kind: str = "data",
+                   count: Optional[int] = None) -> None:
+        """Device page writes split by owning device: data writes land on
+        each page's placement HOME (a rewrite must reach the authoritative
+        copy; replica refresh is the migration layer's separate traffic),
+        while count-only journal/snapshot writes are one sequential log
+        stream and bill to shard 0 — the dedicated-log-device convention
+        the serving layer's background clock shares. Booked per shard +
+        roll-up, forwarded down the spine."""
+        pages, n = resolve_write(page_ids, count)
+        if pages is not None:
+            homes = self.placement.page_to_shard[pages]
+            for s, c in zip(*np.unique(homes, return_counts=True)):
+                book_writes(self.shard_counters[int(s)], int(c), kind)
+        elif n:
+            book_writes(self.shard_counters[0], n, kind)
+        book_writes(self.counters, n, kind)
+        note_inner_writes(self.inner, pages, kind, n)
 
     def kernel_arrays(self) -> tuple:
         return self.inner.kernel_arrays()

@@ -3,7 +3,7 @@ monitor + optional gradient compression. Runs REAL training on this CPU
 container with reduced configs (--smoke) and lowers unchanged for the
 production mesh (launch/dryrun.py proves the full-scale compile).
 
-Fault tolerance drill (used by tests/test_fault_tolerance.py):
+Die-and-resume drill (used by tests/test_training_checkpoint.py):
   python -m repro.launch.train --arch tinyllama-1.1b --smoke --steps 60 \
       --ckpt-dir /tmp/ck --die-at 25        # simulated failure
   python -m repro.launch.train ... --resume # restarts from step 25

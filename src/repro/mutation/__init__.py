@@ -1,11 +1,17 @@
 """Streaming index mutations: delta graph, tombstones, page versioning,
-and background compaction (see docs in each module and ARCHITECTURE.md)."""
+background compaction, and the durability layer — write-ahead journal,
+crash-point fault injection, snapshots, and `recover()` (see docs in each
+module and ARCHITECTURE.md)."""
 from repro.mutation.compactor import (COMPACTION_POLICIES, Compactor,
                                       MutationMix)
 from repro.mutation.delta_index import DeltaIndex
-from repro.mutation.mutable_index import MutableIndex, MutationConfig
+from repro.mutation.journal import (RECORD_KINDS, CrashError, CrashPoint,
+                                    JournalConfig, MutationJournal)
+from repro.mutation.mutable_index import (MutableIndex, MutationConfig,
+                                          recover)
 from repro.mutation.mutable_store import MutablePageStore
 
-__all__ = ["COMPACTION_POLICIES", "Compactor", "DeltaIndex",
-           "MutableIndex", "MutablePageStore", "MutationConfig",
-           "MutationMix"]
+__all__ = ["COMPACTION_POLICIES", "Compactor", "CrashError", "CrashPoint",
+           "DeltaIndex", "JournalConfig", "MutableIndex",
+           "MutablePageStore", "MutationConfig", "MutationJournal",
+           "MutationMix", "RECORD_KINDS", "recover"]

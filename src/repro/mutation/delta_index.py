@@ -68,6 +68,26 @@ class DeltaIndex:
         self._vecs.pop()
         return True
 
+    def state(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Peek the backlog WITHOUT draining: (vids (m,), vecs (m, d)) in
+        insertion order — the snapshot/checkpoint path (a snapshot must
+        capture the delta but leave the live index untouched)."""
+        if not self._vids:
+            return (np.zeros(0, np.int64), np.zeros((0, self.d), np.float32))
+        return (np.asarray(self._vids, np.int64),
+                np.stack(self._vecs).astype(np.float32))
+
+    def load(self, state: Tuple[np.ndarray, np.ndarray]) -> None:
+        """Restore a `state()` capture into this (empty) delta, preserving
+        insertion order."""
+        vids, vecs = state
+        if len(self):
+            raise ValueError(
+                f"load() needs an empty delta (holds {len(self)} vectors)")
+        for vid, vec in zip(np.asarray(vids, np.int64),
+                            np.asarray(vecs, np.float32)):
+            self.insert(int(vid), vec)
+
     def drain(self) -> Tuple[np.ndarray, np.ndarray]:
         """Hand the backlog to a flush: (vids (m,), vecs (m, d)) in
         insertion order, clearing the delta."""

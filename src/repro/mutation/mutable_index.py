@@ -42,6 +42,30 @@ so the serving layer can price background I/O against query I/O.
 With zero mutations every path is a pure pass-through: `search` returns
 the same bits as `DiskIndex.search` (the golden facade contract extends to
 the wrapper — tests/test_mutation.py pins it).
+
+Durability (PR 8)
+-----------------
+Construct with `journal=` (repro/mutation/journal.py: MutationJournal)
+and every logical op — insert / delete / flush / compact — is appended to
+the write-ahead log BEFORE it is applied; flush and compact records are
+force-synced (the two-phase rule: the intent must be durable before any
+data page moves), inserts and deletes ride the group-commit buffer. A
+`crash=` CrashPoint additionally numbers every I/O boundary (journal
+syncs + each data-page write) and kills the index at the configured one.
+
+`recover(base, journal)` rebuilds the pre-crash state by replaying the
+committed log through these same deterministic code paths — the torn
+tail is discarded by checksum, attached stores are charged the replay's
+reads/writes down the conservation spine, and the result is bit-identical
+to an index that applied the same op prefix uninterrupted
+(tests/test_durability.py sweeps every kill point to prove it).
+
+`snapshot()` checkpoints the full mutable state (priced as sequential
+snapshot writes on the spine) and truncates the journal; `restore()` /
+`recover(snapshot=)` start replay from the checkpoint instead of the
+pristine base. The serving loop journals its rng cursor at the end of a
+mutating run, so `recovered_rng()` resumes the exact arrival/victim
+stream a same-seed uninterrupted run would produce.
 """
 from __future__ import annotations
 
@@ -60,6 +84,7 @@ from repro.core.stats import QueryStats
 from repro.core.vamana import beam_search_mem
 from repro.io import build_store
 from repro.mutation.delta_index import DeltaIndex
+from repro.mutation.journal import CrashPoint, MutationJournal
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,7 +140,9 @@ class MutableIndex:
     top."""
 
     def __init__(self, base: DiskIndex,
-                 mcfg: Optional[MutationConfig] = None):
+                 mcfg: Optional[MutationConfig] = None,
+                 journal: Optional[MutationJournal] = None,
+                 crash: Optional[CrashPoint] = None):
         self.base = base
         self.cfg: SearchConfig = base.cfg
         self.mcfg = mcfg or MutationConfig()
@@ -157,6 +184,16 @@ class MutableIndex:
         self._mutated = False
         self._stores: List = []      # attached MutablePageStores
         self._facade_stores: Dict[bool, object] = {}
+        # --- durability (repro/mutation/journal.py) ---
+        self.journal = journal       # write-ahead log of the logical ops
+        self.crash = crash           # numbered-I/O-boundary fault injection
+        self.ops_applied = 0         # insert/delete/flush/compact ops this
+        #                              index has applied (live or replayed) —
+        #                              the resume cursor a crash harness uses
+        self.last_recovery_us = 0.0  # device time the last recover() cost
+        #                              (consumed/reported by serve_open_loop)
+        self._recovered_rng_state = None   # last journaled rng cursor
+        self._replaying = False      # recovery replay must not re-journal
 
     # -- DiskIndex-compatible surface ---------------------------------------
 
@@ -215,11 +252,57 @@ class MutableIndex:
             self._facade_stores[key] = st
         return self._facade_stores[key]
 
+    # -- durability plumbing -------------------------------------------------
+
+    def _journal_append(self, kind: str, payload=None,
+                        sync: bool = False) -> None:
+        """WAL discipline: the record goes to the journal BEFORE the op is
+        applied. Journal pages a group commit flushes are booked on every
+        attached store's write spine (`journal_writes`); the serving loop
+        separately drains `journal.take_pending_io()` onto the background
+        device clock. Replay never re-journals (the log already holds the
+        record)."""
+        if self.journal is None or self._replaying:
+            return
+        pages = self.journal.append(kind, payload, sync=sync)
+        if pages:
+            for st in self._stores:
+                st.note_write(kind="journal", count=pages)
+
+    def _crash_ticks(self, n: int) -> None:
+        """One numbered, killable I/O boundary per data-page write (the
+        journal ticks its own boundaries at sync time)."""
+        if self.crash is not None:
+            for _ in range(n):
+                self.crash.tick()
+
+    def journal_rng_state(self, state) -> None:
+        """Persist the serving loop's rng cursor (a `bit_generator.state`
+        dict) — force-synced, so a resumed run draws the same arrival and
+        delete-victim stream an uninterrupted one would."""
+        self._recovered_rng_state = state
+        self._journal_append("rng", state, sync=True)
+
+    def recovered_rng(self) -> np.random.Generator:
+        """A generator positioned at the last journaled rng cursor — pass
+        as `serve_open_loop(rng=)` to resume a crashed streaming run."""
+        if self._recovered_rng_state is None:
+            raise ValueError(
+                "no rng cursor on record: the journal holds no 'rng' "
+                "record (serve_open_loop journals one at the end of every "
+                "mutating run over a durable index)")
+        gen = np.random.default_rng(0)
+        gen.bit_generator.state = self._recovered_rng_state
+        return gen
+
     # -- mutations -----------------------------------------------------------
 
     def insert(self, vec: np.ndarray) -> int:
         """Stage a vector in the delta; it becomes disk-resident at the
         next flush. Returns the assigned vid."""
+        vec = np.asarray(vec, np.float32).reshape(-1)
+        self._journal_append("insert", vec)
+        self.ops_applied += 1
         vid = self.next_vid
         self.next_vid += 1
         self.delta.insert(vid, vec)
@@ -230,6 +313,8 @@ class MutableIndex:
         """Tombstone a vid. Delta vids die in memory; disk vids keep their
         record (routing) until compaction purges the page."""
         vid = int(vid)
+        self._journal_append("delete", vid)
+        self.ops_applied += 1
         self._mutated = True
         if vid in self.delta:
             return self.delta.remove(vid)
@@ -411,6 +496,10 @@ class MutableIndex:
         every touched page. Returns the I/O accounting dict the serving
         layer prices: {flushed, pages_read, pages_written, read_pages,
         written_pages}."""
+        # two-phase: the flush intent is durable BEFORE any page moves —
+        # recovery re-runs the whole flush from the journaled inserts
+        self._journal_append("flush", None, sync=True)
+        self.ops_applied += 1
         vids, vecs = self.delta.drain()
         m = len(vids)
         if m == 0:
@@ -476,6 +565,7 @@ class MutableIndex:
         self.dirty_pages.update(int(p) for p in pages)
         self.append_pages.update(int(p) for p in pages)
         self.flushes += 1
+        self._crash_ticks(len(written))   # each data-page write can kill
         self._notify_growth()
         self._charge_background(read, written)
         return {"flushed": m, "pages_read": len(read),
@@ -517,6 +607,9 @@ class MutableIndex:
         budget = max_pages or self.mcfg.compaction_pages
         if budget < 1:
             raise ValueError(f"max_pages={budget} must be >= 1")
+        # journal the RESOLVED budget: replay must compact the same slice
+        self._journal_append("compact", int(budget), sync=True)
+        self.ops_applied += 1
         if not self.dirty_pages:
             return {"compacted_pages": 0, "purged": 0, "relocated": 0,
                     "repacked": 0, "pages_read": 0, "pages_written": 0,
@@ -651,11 +744,86 @@ class MutableIndex:
         # freed pages need no device write — they leave the mapping
         written = np.asarray(sorted(nonfree | outside_pages), np.int64)
         self.compactions += 1
+        self._crash_ticks(len(written))   # each data-page write can kill
         self._charge_background(read, written)
         return {"compacted_pages": len(pages), "purged": len(purged),
                 "relocated": relocated, "repacked": repacked,
                 "pages_read": len(read), "pages_written": len(written),
                 "read_pages": read, "written_pages": written}
+
+    # -- snapshots (consistent checkpoints) ----------------------------------
+
+    def snapshot(self) -> dict:
+        """A consistent checkpoint of the full mutable state: deep copies
+        of the layout, graph, PQ codes, vectors, tombstones, delta
+        contents, dirty/append/free page sets, counters, and the rng
+        cursor. Priced as SEQUENTIAL snapshot writes on every attached
+        store's spine (`snapshot_pages` = the page-space image plus the
+        per-vid sidecars), and the journal is truncated — the checkpoint
+        supersedes it. The returned dict feeds `restore()`/
+        `recover(snapshot=)` and is never mutated by either, so one
+        snapshot can seed any number of recoveries (and ROADMAP item 3's
+        shard migration can ship it wholesale)."""
+        lay = self.layout
+        aux_bytes = (self.graph.nbytes + self.pq.codes.nbytes
+                     + self.vectors.nbytes + self.deleted.nbytes)
+        pages = lay.num_pages + -(-aux_bytes // lay.page_bytes)
+        state = {
+            "layout": _copy_layout(lay),
+            "graph": self.graph.copy(),
+            "codes": self.pq.codes.copy(),
+            "vectors": self.vectors.copy(),
+            "deleted": self.deleted.copy(),
+            "cached": self.cached.copy(),
+            "pending_tombstones": set(self.pending_tombstones),
+            "delta": self.delta.state(),
+            "dirty_pages": set(self.dirty_pages),
+            "append_pages": set(self.append_pages),
+            "free_pages": list(self.free_pages),
+            "next_vid": self.next_vid, "n_disk": self.n_disk,
+            "medoid": self.medoid,
+            "flushes": self.flushes, "compactions": self.compactions,
+            "mutated": self._mutated, "ops_applied": self.ops_applied,
+            "rng_state": self._recovered_rng_state,
+            "snapshot_pages": pages,
+        }
+        for st in self._stores:
+            st.note_write(kind="snapshot", count=pages)
+        if self.journal is not None:
+            self.journal.truncate()
+        return state
+
+    def restore(self, snap: dict) -> None:
+        """Load a `snapshot()` checkpoint into THIS index (built over the
+        same base). Deep-copies everything out of `snap` so the snapshot
+        stays reusable, and rebuilds the derived reverse adjacency."""
+        self.layout = _copy_layout(snap["layout"])
+        self.graph = snap["graph"].copy()
+        self.pq.codes = snap["codes"].copy()
+        self.pq.__dict__.pop("_device_arrays", None)
+        self.vectors = snap["vectors"].copy()
+        self.deleted = snap["deleted"].copy()
+        self.cached = snap["cached"].copy()
+        self.pending_tombstones = set(snap["pending_tombstones"])
+        self.delta = DeltaIndex(self.d)
+        self.delta.load(snap["delta"])
+        self.dirty_pages = set(snap["dirty_pages"])
+        self.append_pages = set(snap["append_pages"])
+        self.free_pages = list(snap["free_pages"])
+        self.next_vid = int(snap["next_vid"])
+        self.n_disk = int(snap["n_disk"])
+        self.medoid = int(snap["medoid"])
+        self.flushes = int(snap["flushes"])
+        self.compactions = int(snap["compactions"])
+        self._mutated = bool(snap["mutated"])
+        self.ops_applied = int(snap["ops_applied"])
+        self._recovered_rng_state = snap["rng_state"]
+        self._rev = [set() for _ in range(self.graph.shape[0])]
+        src, col = np.nonzero(self.graph >= 0)
+        for u, v in zip(src.tolist(), self.graph[src, col].tolist()):
+            self._rev[v].add(int(u))
+        for st in self._stores:
+            st.notify_append(self.layout.num_pages, vertex_mask=self.cached)
 
     # -- search (the merged path) -------------------------------------------
 
@@ -709,3 +877,72 @@ class MutableIndex:
                                medoid=self.medoid, memgraph=self.memgraph,
                                batch=batch, collect_visited=False)
         return self.merge_mutations(stats, queries, cfg)
+
+
+# -- crash recovery ----------------------------------------------------------
+
+def recover(base: DiskIndex, journal: MutationJournal,
+            mcfg: Optional[MutationConfig] = None,
+            snapshot: Optional[dict] = None,
+            model=None, attach=()) -> MutableIndex:
+    """Rebuild a MutableIndex from its durable remains: the base (or a
+    `snapshot()` checkpoint) plus the journal's committed record prefix.
+
+    Replay goes through the SAME deterministic code paths the live index
+    ran — insert staging, flush placement + graph wiring, compaction — so
+    the recovered state is bit-identical to an index that applied the same
+    op prefix uninterrupted. The journal's volatile group-commit buffer is
+    dropped first (it died with the process), the torn tail is discarded
+    by checksum (MutationJournal.replay), "intent" markers are skipped
+    (logical replay rebuilds every page they named), and the last "rng"
+    record restores the serving loop's generator cursor
+    (`recovered_rng()`).
+
+    `attach` takes MutablePageStores (built over the recovered index's
+    layout) to attach BEFORE replay: the replayed flushes/compactions then
+    charge their reads and book their writes down the conservation spine,
+    exactly as the live run did. `model` (SSDModel, default-constructed
+    when omitted) prices the recovery itself — journal pages read
+    sequentially plus every redo read/write — into
+    `MutableIndex.last_recovery_us`, which the next `serve_open_loop`
+    reports (and clears) as its `recovery_us` column.
+
+    Idempotent: recovering twice from the same remains yields bit-identical
+    indexes (the journal is only read, the snapshot only copied)."""
+    idx = MutableIndex(base, mcfg)
+    for st in attach:
+        idx.attach_store(st)
+    if snapshot is not None:
+        idx.restore(snapshot)
+    journal.drop_uncommitted()
+    records = journal.replay()
+    redo_reads = redo_writes = 0
+    idx._replaying = True
+    try:
+        for _seq, kind, payload in records:
+            if kind == "insert":
+                idx.insert(payload)
+            elif kind == "delete":
+                idx.delete(payload)
+            elif kind == "flush":
+                acct = idx.flush()
+                redo_reads += acct["pages_read"]
+                redo_writes += acct["pages_written"]
+            elif kind == "compact":
+                acct = idx.compact(payload)
+                redo_reads += acct["pages_read"]
+                redo_writes += acct["pages_written"]
+            elif kind == "rng":
+                idx._recovered_rng_state = payload
+            # "intent"/"snapshot" markers carry no logical state
+    finally:
+        idx._replaying = False
+    idx.journal = journal            # resumed ops append after the prefix
+    if model is None:
+        from repro.core.device_model import SSDModel
+        model = SSDModel()
+    idx.last_recovery_us = (
+        journal.log_pages * model.read_service_us(journal.cfg.page_bytes)
+        + redo_reads * model.read_service_us(idx.layout.page_bytes)
+        + redo_writes * model.write_service_us(idx.layout.page_bytes))
+    return idx

@@ -18,12 +18,23 @@ adds the one store layer that knows pages have VERSIONS:
       (`notify_append`) it grows the version vector, extends a sharded
       placement's page→shard map, and refreshes the static vertex mask.
 
-Write traffic (`note_write`) is booked in THIS layer's
-`counters.pages_written` only: the layers below model a read path, and
-threading a second conservation spine through every decorator for a
-number only the mutation subsystem produces would buy nothing. Reads the
-background jobs issue (compaction reading dirty pages) go down the normal
-accounting-only `charge` spine and so stay conserved at every layer.
+Write traffic (`note_write`) rides the write half of the conservation
+spine: every layer books `pages_written` split by kind (`data_writes` /
+`journal_writes` / `snapshot_writes`) 1:1 and forwards down, so the
+invariant pages_written == data + journal + snapshot holds at every
+layer of every stack — the mirror of what `charge` keeps for reads.
+Reads the background jobs issue (compaction reading dirty pages) go down
+the accounting-only `charge` spine as before.
+
+Durability (PR 8): this layer is where a page write can TEAR. With a
+`journal` attached (repro/mutation/journal.py: MutationJournal) every
+data-page write is two-phase — a synced intent record naming the pages,
+then the pages themselves — and with a `crash` attached (CrashPoint)
+each of those I/O boundaries is numbered and killable, which is what the
+crash-point sweep in tests/test_durability.py drives. An index-owned
+journal (MutableIndex(journal=)) supersedes a store-owned one: the index
+journals logical ops and ticks the crash clock itself, and its attached
+stores only book the traffic.
 """
 from __future__ import annotations
 
@@ -31,7 +42,8 @@ from typing import Iterable, List, Optional
 
 import numpy as np
 
-from repro.io.page_store import StoreCounters
+from repro.io.page_store import (StoreCounters, book_writes,
+                                 note_inner_writes, resolve_write)
 
 #: StoreCounters fields mirrored from the inner store on every delegated
 #: read-path call (pages_written is booked at this layer only).
@@ -43,11 +55,16 @@ class MutablePageStore:
     """Decorator: page versioning + rewrite invalidation over a finished
     store stack. `build_store(..., mutable=True)` composes it on top."""
 
-    def __init__(self, inner):
+    def __init__(self, inner, journal=None, crash=None):
         self.inner = inner
         self.counters = StoreCounters()
         self.page_version = np.zeros(inner.num_pages, np.int64)
         self.invalidations = 0      # stale cached copies actually evicted
+        # durability hooks (repro/mutation/journal.py): a store-owned
+        # journal makes every data-page write two-phase (synced intent
+        # record first); a CrashPoint numbers + kills the I/O boundaries
+        self.journal = journal
+        self.crash = crash
 
     # -- delegation with mirrored accounting ---------------------------------
 
@@ -176,11 +193,29 @@ class MutablePageStore:
                 layer.cached_vertices = np.asarray(vertex_mask, bool)
         self._drop_kernel_memos()
 
-    def note_write(self, page_ids: Iterable[int]) -> None:
-        """Book rewritten pages (flush/compaction write traffic) at this
-        layer — the read-modeling layers below carry no write books."""
-        self.counters.pages_written += len(np.asarray(list(page_ids),
-                                                      np.int64).reshape(-1))
+    def note_write(self, page_ids: Optional[Iterable[int]] = None, *,
+                   kind: str = "data",
+                   count: Optional[int] = None) -> None:
+        """Book device page writes, 1:1 down the spine. With a store-owned
+        journal, a data write is TWO-PHASE: the page ids are first made
+        durable as a synced intent record (billed as journal writes on
+        this same spine), and only then do the data pages move — each one
+        a numbered, killable I/O boundary when a CrashPoint is armed. A
+        kill between intent and data pages is exactly the torn-write state
+        recovery must survive: the journal names pages whose bytes never
+        landed, and logical replay rebuilds them."""
+        pages, n = resolve_write(page_ids, count)
+        if kind == "data" and self.journal is not None and n:
+            jpages = self.journal.append(
+                "intent", [int(p) for p in pages], sync=True)
+            if jpages:
+                book_writes(self.counters, jpages, "journal")
+                note_inner_writes(self.inner, None, "journal", jpages)
+        if kind == "data" and self.crash is not None:
+            for _ in range(n):
+                self.crash.tick()
+        book_writes(self.counters, n, kind)
+        note_inner_writes(self.inner, pages, kind, n)
 
     def version_of(self, page: int) -> int:
         return int(self.page_version[page])

@@ -332,6 +332,15 @@ class OpenLoopReport:
     overlap_ratio: float = 0.0   # live-vertex OR(G) after the run (0.0 on
     #                              non-mutating runs: frozen indexes report
     #                              it at build time instead)
+    journal_writes: int = 0      # write-ahead journal pages committed (only
+    #                              nonzero over a durable MutableIndex —
+    #                              billed at the write unit on the same
+    #                              background clock as flush/compaction)
+    recovery_us: float = 0.0     # device time the preceding recover() cost
+    #                              (journal replay reads + redo I/O) —
+    #                              reported once by the first run after a
+    #                              recovery, NOT folded into the window's
+    #                              clock (recovery completes before serving)
     seed: Optional[int] = None   # the ONE rng seed that reproduces the run
     #                              (arrivals + mutation kinds + delete
     #                              victims); None when the caller supplied
@@ -368,6 +377,10 @@ class OpenLoopReport:
                 "bg_util": round(self.bg_util, 4),
                 "overlap_ratio": round(self.overlap_ratio, 4),
             })
+        if self.journal_writes:
+            row["journal_writes"] = self.journal_writes
+        if self.recovery_us:
+            row["recovery_us"] = round(self.recovery_us, 1)
         row.update(_tenant_columns(self.per_tenant))
         row.update(_shard_columns(self.per_shard))
         return row
@@ -977,10 +990,20 @@ class AnnServer:
         # is priced read/write asymmetrically
         mu = {"inserts": 0, "deletes": 0, "flushes": 0, "compactions": 0,
               "reads": 0, "writes": 0, "io_us": 0.0, "free": 0.0,
-              "ins_i": 0}
+              "ins_i": 0, "journal": 0}
         rd_us = self.model.read_service_us(self.cfg.page_bytes)
         wr_us = self.model.write_service_us(self.cfg.page_bytes)
         compactor = Compactor(self.index, mm) if mm is not None else None
+        # durable MutableIndex: journal commits occupy the same background
+        # device clock as flush/compaction I/O, and a preceding recover()'s
+        # cost is reported (once) without deferring this window's work —
+        # recovery completed before the window opened
+        jrn = (getattr(self.index, "journal", None)
+               if self._mutable else None)
+        rec_us = 0.0
+        if self._mutable and getattr(self.index, "last_recovery_us", 0.0):
+            rec_us = float(self.index.last_recovery_us)
+            self.index.last_recovery_us = 0.0
 
         exec_free = 0.0
         est_service: Optional[float] = None
@@ -991,6 +1014,19 @@ class AnnServer:
         shard_win = self._shard_window()
         degraded_n = 0
         t_end = 0.0
+
+        def jrn_drain(t: float) -> None:
+            """Bill journal pages committed since the last drain: one
+            sequential write stream holding the device exactly like
+            flush/compaction I/O (group commits amortize page rounding)."""
+            if jrn is None:
+                return
+            pages = jrn.take_pending_io()
+            if pages:
+                us = pages * wr_us
+                mu["free"] = max(mu["free"], t) + us
+                mu["io_us"] += us
+                mu["journal"] += pages
 
         def bg_run(acct, t: float, kind: str) -> None:
             if not acct:
@@ -1022,6 +1058,7 @@ class AnnServer:
                 if vid is not None and self.index.delete(vid):
                     mu["deletes"] += 1
             bg_run(compactor.after_mutation(), t, "compactions")
+            jrn_drain(t)
 
         i = 0
         mb = scfg.max_batch
@@ -1086,11 +1123,17 @@ class AnnServer:
             if compactor is not None:
                 # "continuous" policy: a bounded repair rides each batch
                 bg_run(compactor.after_batch(), exec_free, "compactions")
+                jrn_drain(exec_free)
 
+        if mm is not None and jrn is not None:
+            # persist the rng cursor: a crashed run's recover() +
+            # recovered_rng() then resumes the exact arrival/victim stream
+            self.index.journal_rng_state(gen.bit_generator.state)
+            jrn_drain(exec_free)
         t_end = max(t_end, mu["free"])
-        mut_kw = {}
+        mut_kw = dict(journal_writes=mu["journal"], recovery_us=rec_us)
         if mm is not None:
-            mut_kw = dict(
+            mut_kw.update(
                 inserts=mu["inserts"], deletes=mu["deletes"],
                 flushes=mu["flushes"], compactions=mu["compactions"],
                 bg_pages_read=mu["reads"], bg_pages_written=mu["writes"],

@@ -1,0 +1,282 @@
+"""Crash-point sweep over the durability layer (PR 8).
+
+The headline acceptance: kill the mutable index at ANY numbered I/O
+boundary (journal sync or data-page write) mid-way through a scripted
+insert/delete/flush/compact trace, `recover()` from the base snapshot plus
+the journal's committed prefix, resume the script from
+`MutableIndex.ops_applied`, and the final state is BIT-IDENTICAL to a run
+that never crashed — search ids and dists, tombstone set, free list,
+dirty set, and `overlap_ratio` all agree exactly.
+
+Tiers: the full every-boundary sweep is `-m slow`; the fast default tier
+samples a handful of boundaries (first, quartiles, the penultimate, the
+last). Alongside the sweep: torn-tail discard (truncated and bit-flipped
+last record), double-recovery idempotence, snapshot-seeded recovery, the
+golden-facade contract on a durable zero-mutation index, and the
+serve-level rng-cursor resume (a recovered `serve_open_loop` window is
+row-identical to the same-seed uninterrupted one — satellite of the PR 7
+fleet determinism test)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import build_index, get_preset, make_dataset
+from repro.core.vamana import build_vamana
+from repro.mutation import (CrashError, CrashPoint, JournalConfig,
+                            MutableIndex, MutationConfig, MutationJournal,
+                            MutationMix, recover)
+
+GC = 4   # group-commit batch of the sweep's journal (buffer loss is part
+#          of what the sweep must survive: buffered ops get re-applied)
+
+
+def _script(d, n_ops=40, seed=17):
+    """Deterministic op trace exercising every record kind, including
+    no-op deletes (journaled and replayed as the same no-op) and flushes
+    of a part-full delta."""
+    rng = np.random.default_rng(seed)
+    ops = []
+    for _ in range(n_ops):
+        r = rng.random()
+        if r < 0.50:
+            ops.append(("insert", rng.normal(size=d).astype(np.float32)))
+        elif r < 0.75:
+            ops.append(("delete", int(rng.integers(300))))
+        elif r < 0.90:
+            ops.append(("flush",))
+        else:
+            ops.append(("compact", 4))
+    return ops
+
+
+def _apply(idx, script, start=0):
+    for op in script[start:]:
+        if op[0] == "insert":
+            idx.insert(op[1])
+        elif op[0] == "delete":
+            idx.delete(op[1])
+        elif op[0] == "flush":
+            idx.flush()
+        else:
+            idx.compact(op[1])
+
+
+def _state(idx, queries):
+    st = idx.search(queries)
+    return {"ids": np.asarray(st.ids).copy(),
+            "dists": np.asarray(st.dists).copy(),
+            "tombstones": set(idx.pending_tombstones),
+            "free": list(idx.free_pages),
+            "dirty": set(idx.dirty_pages),
+            "n_disk": idx.n_disk, "next_vid": idx.next_vid,
+            "delta": len(idx.delta), "ops": idx.ops_applied,
+            "overlap": idx.overlap_ratio()}
+
+
+def _assert_identical(got, ref):
+    assert np.array_equal(got["ids"], ref["ids"])
+    assert np.array_equal(got["dists"], ref["dists"])   # bit-identical
+    for key in ("tombstones", "free", "dirty", "n_disk", "next_vid",
+                "delta", "ops", "overlap"):
+        assert got[key] == ref[key], key
+
+
+@dataclasses.dataclass
+class Harness:
+    base: object
+    mcfg: MutationConfig
+    script: list
+    queries: np.ndarray
+    ref: dict          # final state of the uninterrupted (journal-free) run
+    boundaries: int    # killable I/O boundaries in the durable run
+
+
+@pytest.fixture(scope="module")
+def dur():
+    ds = make_dataset("deep-like", n=256, nq=8, seed=11)
+    G, med, _ = build_vamana(ds.vectors, R=8, L=16, batch=128, seed=11)
+    base = build_index(ds, get_preset("baseline"), graph=G, medoid_id=med)
+    mcfg = MutationConfig(flush_threshold=8, growth_chunk=64, insert_L=8)
+    script = _script(base.layout.page_vecs.shape[-1])
+    plain = MutableIndex(base, mcfg)
+    _apply(plain, script)
+    ref = _state(plain, ds.queries)
+    # counting pass: kill_at=None numbers the boundaries without firing —
+    # and doubles as the journaling-is-inert check (same bits as plain)
+    cp = CrashPoint()
+    durable = MutableIndex(base, mcfg,
+                           journal=MutationJournal(JournalConfig(GC)),
+                           crash=cp)
+    _apply(durable, script)
+    _assert_identical(_state(durable, ds.queries), ref)
+    assert cp.boundaries > len(script) // 4
+    return Harness(base, mcfg, script, ds.queries, ref, cp.boundaries)
+
+
+def _kill_recover_resume(dur, k):
+    """Kill the durable run at boundary k, recover, resume, return the
+    final state (the harness the sweep tiers share)."""
+    j = MutationJournal(JournalConfig(GC))
+    idx = MutableIndex(dur.base, dur.mcfg, journal=j,
+                       crash=CrashPoint(kill_at=k))
+    with pytest.raises(CrashError):
+        _apply(idx, dur.script)
+    rec = recover(dur.base, j, dur.mcfg)
+    assert rec.ops_applied <= len(dur.script)
+    assert rec.last_recovery_us > 0
+    _apply(rec, dur.script, rec.ops_applied)
+    return _state(rec, dur.queries)
+
+
+def _sample(boundaries):
+    picks = {1, boundaries // 4, boundaries // 2, 3 * boundaries // 4,
+             boundaries - 1, boundaries}
+    return sorted(p for p in picks if p >= 1)
+
+
+def test_crash_recover_resume_sampled(dur):
+    """Fast tier: first/quartile/last boundaries."""
+    for k in _sample(dur.boundaries):
+        _assert_identical(_kill_recover_resume(dur, k), dur.ref)
+
+
+@pytest.mark.slow
+def test_crash_recover_resume_every_boundary(dur):
+    """The full sweep: EVERY journal sync and data-page write is a kill
+    point, and every one of them recovers to the same bits."""
+    for k in range(1, dur.boundaries + 1):
+        _assert_identical(_kill_recover_resume(dur, k), dur.ref)
+
+
+# -- torn tails ---------------------------------------------------------------
+
+
+def _torn_tail_case(dur, mangle):
+    """Common harness: journal 12 ops with per-op sync, mangle the last
+    durable record, recover (tail discarded by framing/checksum), resume
+    the dropped op, land on the uninterrupted prefix state."""
+    prefix = dur.script[:12]
+    j = MutationJournal(JournalConfig(group_commit=1))
+    idx = MutableIndex(dur.base, dur.mcfg, journal=j)
+    _apply(idx, prefix)
+    assert len(j.replay()) == len(prefix) and j.torn_records == 0
+    mangle(j)
+    rec = recover(dur.base, j, dur.mcfg)
+    assert j.torn_records == 1           # exactly the mangled tail dropped
+    assert rec.ops_applied == len(prefix) - 1
+    _apply(rec, prefix, rec.ops_applied)
+    plain = MutableIndex(dur.base, dur.mcfg)
+    _apply(plain, prefix)
+    _assert_identical(_state(rec, dur.queries), _state(plain, dur.queries))
+
+
+def test_torn_tail_truncated_record_is_discarded(dur):
+    _torn_tail_case(dur, lambda j: j.tear_tail(3))
+
+
+def test_torn_tail_corrupted_record_is_discarded(dur):
+    """A bit flip in the last record's body fails its crc32 — same
+    discard path as a short write."""
+    _torn_tail_case(dur, lambda j: j.corrupt_tail())
+
+
+def test_double_recovery_is_idempotent(dur):
+    """The journal is only read and the base never mutated: recovering
+    twice from the same remains yields bit-identical indexes."""
+    k = max(1, dur.boundaries // 2)
+    j = MutationJournal(JournalConfig(GC))
+    idx = MutableIndex(dur.base, dur.mcfg, journal=j,
+                       crash=CrashPoint(kill_at=k))
+    with pytest.raises(CrashError):
+        _apply(idx, dur.script)
+    rec_a = recover(dur.base, j, dur.mcfg)
+    rec_b = recover(dur.base, j, dur.mcfg)
+    assert rec_a.ops_applied == rec_b.ops_applied
+    _assert_identical(_state(rec_a, dur.queries),
+                      _state(rec_b, dur.queries))
+
+
+def test_snapshot_seeds_recovery_and_truncates_journal(dur):
+    """snapshot() supersedes the log: recovery restores the checkpoint and
+    replays only the ops journaled after it, landing on the same bits as
+    the uninterrupted run (modulo the group-commit buffer, re-applied on
+    resume)."""
+    j = MutationJournal(JournalConfig(GC))
+    idx = MutableIndex(dur.base, dur.mcfg, journal=j)
+    _apply(idx, dur.script[:20])
+    snap = idx.snapshot()
+    assert j.log_bytes == 0              # the checkpoint truncated the log
+    assert snap["ops_applied"] == 20
+    _apply(idx, dur.script, 20)
+    _assert_identical(_state(idx, dur.queries), dur.ref)
+    rec = recover(dur.base, j, dur.mcfg, snapshot=snap)
+    assert rec.ops_applied >= 20
+    _apply(rec, dur.script, rec.ops_applied)
+    _assert_identical(_state(rec, dur.queries), dur.ref)
+    # the snapshot dict survived both restores unmutated: reusable
+    rec2 = recover(dur.base, j, dur.mcfg, snapshot=snap)
+    _apply(rec2, dur.script, rec2.ops_applied)
+    _assert_identical(_state(rec2, dur.queries), dur.ref)
+
+
+def test_durable_zero_mutation_facade_stays_golden(dur):
+    """The golden facade contract survives the durability layer: a
+    journal-equipped wrapper with zero mutations returns the same bits as
+    DiskIndex.search."""
+    idx = MutableIndex(dur.base, dur.mcfg, journal=MutationJournal())
+    a = dur.base.search(dur.queries)
+    b = idx.search(dur.queries)
+    assert np.array_equal(a.ids, b.ids)
+    assert np.array_equal(a.dists, b.dists)
+    assert np.array_equal(a.page_reads, b.page_reads)
+    assert np.array_equal(a.hops, b.hops)
+
+
+# -- serve-level rng-cursor resume (mirrors PR 7's fleet determinism) ---------
+
+
+def test_recovered_rng_resumes_arrival_stream(base_index, small_dataset):
+    """`recover()` restores the mutation rng cursor: a crashed streaming
+    run resumed via `serve_open_loop(rng=recovered_rng())` reproduces the
+    exact arrival/victim stream — and therefore the exact report row —
+    of the same-seed uninterrupted run. `recovery_us` is the one extra
+    (report-only) column the resumed row carries."""
+    from repro.serving import AnnServer, ServerConfig
+
+    pool = small_dataset.vectors[:128].astype(np.float32)
+    mix = MutationMix(insert_frac=0.3, delete_frac=0.2,
+                      compaction="threshold", threshold=0.05, max_pages=8)
+    mcfg = MutationConfig(flush_threshold=16, insert_L=8)
+    kw = dict(rate_qps=4000.0, duration_us=30000.0, mutation_mix=mix,
+              insert_pool=pool)
+
+    def windows(idx):
+        srv = AnnServer(idx, server_cfg=ServerConfig(max_batch=8))
+        w1 = srv.serve_open_loop(small_dataset.queries, seed=3,
+                                 **kw).row()
+        w2 = srv.serve_open_loop(small_dataset.queries,
+                                 rng=idx.recovered_rng(), **kw).row()
+        return w1, w2
+
+    # A: both windows uninterrupted (the rng cursor journaled after each)
+    j_a = MutationJournal(JournalConfig(group_commit=4))
+    idx_a = MutableIndex(base_index, mcfg, journal=j_a)
+    a1, a2 = windows(idx_a)
+
+    # B: window 1 same seed, then "crash" (drop the live index), recover,
+    # resume window 2 from the journaled cursor
+    j_b = MutationJournal(JournalConfig(group_commit=4))
+    idx_b = MutableIndex(base_index, mcfg, journal=j_b)
+    srv_b = AnnServer(idx_b, server_cfg=ServerConfig(max_batch=8))
+    b1 = srv_b.serve_open_loop(small_dataset.queries, seed=3, **kw).row()
+    rec = recover(base_index, j_b, mcfg)
+    srv_r = AnnServer(rec, server_cfg=ServerConfig(max_batch=8))
+    b2 = srv_r.serve_open_loop(small_dataset.queries,
+                               rng=rec.recovered_rng(), **kw).row()
+
+    assert a1 == b1
+    assert a1["journal_writes"] > 0
+    assert "recovery_us" not in a2
+    assert b2.pop("recovery_us") > 0     # priced exactly once, report-only
+    assert a2 == b2

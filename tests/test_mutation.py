@@ -180,7 +180,9 @@ def test_mutable_store_notify_append_extends_versions_and_placement(
     assert len(st.placement.page_to_shard) == P + 4
     st.note_write([0, 1, 2])
     assert st.counters.pages_written == 3
-    assert st.inner.counters.pages_written == 0    # writes book at the top
+    assert st.counters.data_writes == 3
+    # PR 8: writes forward down the spine like reads (conservation)
+    assert st.inner.counters.pages_written == 3
     with pytest.raises(ValueError, match="shrink"):
         st.notify_append(P)
 

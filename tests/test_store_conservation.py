@@ -10,10 +10,16 @@ asserts, at each decorator:
      additionally bank the dedup: requested - fetched - hits == savings)
   2. the decorator's pages_fetched equals the inner store's movement
      (every read this layer charged reached the device it decorates)
+  3. pages_written == data_writes + journal_writes + snapshot_writes, and
+     the write totals roll 1:1 to the BOTTOM of every stack (incl. the
+     sharded per-shard sum) — the write half of the spine the durability
+     layer (repro/mutation/journal.py) bills journal commits on
 
-Both previously FAILED for SharedCachePageStore.replay_batch, which booked
-issued reads only in its own counters — the bugfix this test pins down.
-All `-m fast` (tiny synthetic layouts, no graph build)."""
+Both read invariants previously FAILED for
+SharedCachePageStore.replay_batch, which booked issued reads only in its
+own counters — the bugfix this test pins down. All `-m fast` (tiny
+synthetic layouts, no graph build) except the recovery-replay spine test,
+which builds one tiny real index."""
 import numpy as np
 import pytest
 
@@ -23,6 +29,8 @@ from repro.io import (BatchedPageStore, PrefetchingPageStore,
 from repro.mutation import MutablePageStore
 
 pytestmark = pytest.mark.fast
+
+WRITE_FIELDS = ("data_writes", "journal_writes", "snapshot_writes")
 
 
 @pytest.fixture()
@@ -99,9 +107,12 @@ def _drive(store, layout):
     # the record-returning paths move the same books
     store.fetch([0, 1, 1, 2])
     if isinstance(store, MutablePageStore):
-        # rewrite path: invalidation + write booking + the charged re-read
+        # rewrite path: invalidation + write booking + the charged re-read,
+        # plus the durability layer's count-only sequential traffic
         store.invalidate([0, 1])
         store.note_write([0, 1])
+        store.note_write(kind="journal", count=3)
+        store.note_write(kind="snapshot", count=2)
         store.fetch([0, 1])
     if not hasattr(store, "shard_counters"):
         # vertex-granular fetches pass through the shard layer into the
@@ -128,15 +139,26 @@ def test_conservation_at_every_layer(name, tiny_layout):
     for layer, inner in zip(layers, layers[1:] + [None]):
         c = layer.counters
         label = f"{name}:{type(layer).__name__}"
+        # write conservation at EVERY layer: total == sum of kinds, and the
+        # booking forwarded 1:1 to the layer below (all zeros on stacks the
+        # workload never writes to — the invariant still holds)
+        assert c.pages_written == sum(
+            getattr(c, f) for f in WRITE_FIELDS), label
+        if inner is not None:
+            for f in WRITE_FIELDS + ("pages_written",):
+                assert getattr(c, f) == getattr(inner.counters, f), \
+                    (label, f)
         if isinstance(layer, MutablePageStore):
             # the mutable wrapper mirrors EVERY read-path field of the
-            # stack it decorates; writes are its own ledger
+            # stack it decorates
             for f in ("pages_requested", "pages_fetched", "cache_hits",
                       "records_fetched"):
                 assert getattr(c, f) == getattr(inner.counters, f), \
                     (label, f)
-            assert c.pages_written == 2, label
-            assert inner.counters.pages_written == 0, label
+            assert c.data_writes == 2, label
+            assert c.journal_writes == 3, label
+            assert c.snapshot_writes == 2, label
+            assert c.pages_written == 7, label
             continue
         if isinstance(layer, (BatchedPageStore, ShardedPageStore)):
             # coalescing layers bank their cross-query dedup as savings,
@@ -159,9 +181,11 @@ def test_conservation_at_every_layer(name, tiny_layout):
             # every read this layer charged reached the store it decorates
             assert c.pages_fetched == inner.counters.pages_fetched, label
         if isinstance(layer, ShardedPageStore):
-            # the roll-up equals the per-shard sum, field by field
+            # the roll-up equals the per-shard sum, field by field —
+            # including the write ledger (data writes land on placement
+            # homes, journal/snapshot streams on shard 0)
             for f in ("pages_requested", "pages_fetched", "cache_hits",
-                      "records_fetched"):
+                      "records_fetched", "pages_written") + WRITE_FIELDS:
                 assert getattr(c, f) == sum(
                     getattr(sc, f) for sc in layer.shard_counters), (label, f)
 
@@ -178,3 +202,69 @@ def test_replay_charges_reach_the_bottom(tiny_layout):
     base = store.inner.inner
     assert base.counters.pages_fetched == acct["issued"]
     assert base.counters.records_fetched == acct["issued"] * tiny_layout.n_p
+
+
+def test_journaled_stack_conserves_writes(tiny_layout):
+    """A store-owned journal makes data writes two-phase: the intent
+    record's journal pages AND the data pages both land on the write spine
+    at every layer, and the journal's own page count agrees with the
+    booked journal_writes."""
+    from repro.mutation import JournalConfig, MutationJournal
+    j = MutationJournal(JournalConfig(group_commit=1,
+                                      page_bytes=tiny_layout.page_bytes))
+    store = build_store(tiny_layout, batched=True, cache_policy="lru",
+                        cache_bytes=8 * tiny_layout.page_bytes,
+                        mutable=True, journal=j)
+    store.note_write([0, 1, 2])
+    store.note_write([4])
+    for layer in _layers(store):
+        c = layer.counters
+        label = type(layer).__name__
+        assert c.data_writes == 4, label
+        assert c.journal_writes == j.pages_written > 0, label
+        assert c.pages_written == c.data_writes + c.journal_writes, label
+    # the intent records survive in the log, naming the written pages
+    intents = [p for _, k, p in j.replay() if k == "intent"]
+    assert intents == [[0, 1, 2], [4]]
+
+
+@pytest.fixture(scope="module")
+def tiny_index():
+    from repro.core import build_index, get_preset, make_dataset
+    from repro.core.vamana import build_vamana
+    ds = make_dataset("deep-like", n=128, nq=4, seed=3)
+    G, med, _ = build_vamana(ds.vectors, R=4, L=8, batch=64, seed=3)
+    return build_index(ds, get_preset("baseline"), graph=G, medoid_id=med)
+
+
+def test_recovery_replay_charges_reads_on_spine(tiny_index):
+    """recover(attach=[store]) replays the journal's flushes over the
+    attached stack: the redo reads go down the `charge` spine and the redo
+    writes down the write spine, conserved at every layer — recovery I/O
+    is never free."""
+    from repro.mutation import (JournalConfig, MutableIndex,
+                                MutationConfig, MutationJournal, recover)
+    mcfg = MutationConfig(flush_threshold=4, growth_chunk=32, insert_L=8)
+    j = MutationJournal(JournalConfig(group_commit=2))
+    live = MutableIndex(tiny_index, mcfg, journal=j)
+    rng = np.random.default_rng(5)
+    for i in range(6):
+        live.insert(rng.normal(size=live.d).astype(np.float32))
+    live.delete(3)
+    live.flush()
+
+    store = build_store(live.layout, batched=True, mutable=True)
+    recovered = recover(tiny_index, j, mcfg, attach=[store])
+    assert recovered.ops_applied == live.ops_applied
+    assert recovered.last_recovery_us > 0
+    layers = _layers(store)
+    top = store.counters
+    # the replayed flush charged its read-modify-write reads and booked
+    # its page writes on the attached spine, conserved to the bottom
+    assert top.pages_written > 0
+    assert top.pages_written == top.data_writes
+    for layer in layers:
+        c = layer.counters
+        label = type(layer).__name__
+        assert c.pages_written == top.pages_written, label
+        assert c.pages_fetched == top.pages_fetched, label

@@ -1,4 +1,11 @@
-"""Checkpoint/restart, data determinism, straggler monitor, optimizer."""
+"""TRAINING-side durability and determinism: `repro.training.checkpoint`
+roundtrip/prune, the data pipeline's die-and-resume, the optimizer, and
+the straggler monitor.
+
+(Previously named test_fault_tolerance.py, which made `pytest -k fault`
+select training tests while the SERVING-side fault story lives in
+tests/test_durability.py — the crash/recover sweep over the mutable
+index's write-ahead journal.)"""
 import json
 import subprocess
 import sys
