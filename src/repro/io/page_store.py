@@ -42,6 +42,8 @@ from typing import Optional, Protocol, runtime_checkable
 import jax.numpy as jnp
 import numpy as np
 
+from repro import sanitize
+
 
 @dataclasses.dataclass
 class StoreCounters:
@@ -56,15 +58,24 @@ class StoreCounters:
     journal_writes: int = 0    # write-ahead journal commits (sequential)
     snapshot_writes: int = 0   # snapshot checkpoint pages (sequential)
 
+    def __setattr__(self, name: str, value) -> None:
+        # REPRO_SANITIZE=1: counters only count — non-negative and monotone
+        # (reset() bypasses via object.__setattr__). A decrement means some
+        # layer un-booked I/O, which the conservation property tests can
+        # only catch after the fact; this catches it at the exact line.
+        if sanitize.enabled():
+            old = self.__dict__.get(name)
+            sanitize.check(
+                value >= 0,
+                f"counter {name} set to negative value {value}")
+            sanitize.check(
+                old is None or value >= old,
+                f"counter {name} moved backward: {old} -> {value}")
+        object.__setattr__(self, name, value)
+
     def reset(self) -> None:
-        self.pages_requested = 0
-        self.pages_fetched = 0
-        self.cache_hits = 0
-        self.records_fetched = 0
-        self.pages_written = 0
-        self.data_writes = 0
-        self.journal_writes = 0
-        self.snapshot_writes = 0
+        for f in dataclasses.fields(self):
+            object.__setattr__(self, f.name, 0)
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -112,6 +123,10 @@ def book_writes(counters: StoreCounters, n_pages: int, kind: str) -> None:
     counters.pages_written += n_pages
     setattr(counters, f"{kind}_writes",
             getattr(counters, f"{kind}_writes") + n_pages)
+    # write conservation holds again at the end of every booking (it is
+    # transiently broken between the two bumps above, so the check lives
+    # here, not in __setattr__)
+    sanitize.check_counters(counters)
 
 
 def resolve_write(page_ids, count: Optional[int]) -> tuple:
@@ -185,7 +200,7 @@ class ArrayPageStore:
     def __init__(self, layout):
         self.layout = layout
         self.counters = StoreCounters()
-        self._kernel_cache = None
+        self._kernel_cache: Optional[tuple] = None
 
     @property
     def num_pages(self) -> int:

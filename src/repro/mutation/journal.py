@@ -135,6 +135,7 @@ class MutationJournal:
         self.records_appended = 0
         self.pages_written = 0       # lifetime journal page writes
         self.pending_pages = 0       # unbilled pages (take_pending_io)
+        self.torn_records = 0        # set by replay(): tail dropped as torn
 
     # -- append / commit ----------------------------------------------------
 

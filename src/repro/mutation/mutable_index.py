@@ -192,7 +192,7 @@ class MutableIndex:
         #                              the resume cursor a crash harness uses
         self.last_recovery_us = 0.0  # device time the last recover() cost
         #                              (consumed/reported by serve_open_loop)
-        self._recovered_rng_state = None   # last journaled rng cursor
+        self._recovered_rng_state: Optional[dict] = None  # journaled cursor
         self._replaying = False      # recovery replay must not re-journal
 
     # -- DiskIndex-compatible surface ---------------------------------------

@@ -1,0 +1,92 @@
+"""Runtime sanitizer: TSan-style asserts over the simulator's accounting.
+
+``REPRO_SANITIZE=1`` arms cheap invariant checks at the boundaries every
+measurement flows through:
+
+- `StoreCounters` fields are non-negative and monotone (outside `reset()`),
+  and every write booking leaves ``pages_written == data_writes +
+  journal_writes + snapshot_writes`` — the conservation spine, enforced
+  live instead of only by after-the-fact property tests;
+- the serving loops' background clock only moves forward and only by
+  non-negative priced durations;
+- every open-loop/fleet report satisfies ``offered == admitted + shed``
+  and ``completed == admitted`` (nothing admitted vanishes, nothing shed
+  is double-counted).
+
+Disabled (the default) the hooks are a single falsy-global test, so the
+fast path costs nothing; tests flip the switch with `set_enabled`.
+A violation raises `SanitizeError` (an `AssertionError` subclass: pytest
+and plain `python -O`-free runs both fail loudly).
+
+Registered in README ("Running the tests"); rule catalog companion:
+docs/contracts.md.
+"""
+from __future__ import annotations
+
+import os
+
+__all__ = ["SanitizeError", "enabled", "set_enabled", "check",
+           "check_counters", "check_open_report"]
+
+
+class SanitizeError(AssertionError):
+    """An accounting invariant the measurements depend on was violated."""
+
+
+_ENABLED = os.environ.get("REPRO_SANITIZE", "") not in ("", "0")
+
+
+def enabled() -> bool:
+    return _ENABLED
+
+
+def set_enabled(on: bool) -> bool:
+    """Flip the sanitizer (returns the previous state) — test hook, so a
+    single process can exercise both armed and disarmed paths."""
+    global _ENABLED
+    prev = _ENABLED
+    _ENABLED = bool(on)
+    return prev
+
+
+def check(cond: bool, msg: str) -> None:
+    """Assert `cond` when the sanitizer is armed."""
+    if _ENABLED and not cond:
+        raise SanitizeError(msg)
+
+
+def check_counters(counters) -> None:
+    """Full-state check of one `StoreCounters`: non-negative fields and
+    write conservation. Called at every `book_writes` boundary."""
+    if not _ENABLED:
+        return
+    d = counters.as_dict()
+    for name, value in d.items():
+        if value < 0:
+            raise SanitizeError(f"counter {name} is negative: {value}")
+    total = d["data_writes"] + d["journal_writes"] + d["snapshot_writes"]
+    if d["pages_written"] != total:
+        raise SanitizeError(
+            f"write conservation broken: pages_written="
+            f"{d['pages_written']} != data+journal+snapshot={total} "
+            f"({d['data_writes']}+{d['journal_writes']}"
+            f"+{d['snapshot_writes']})")
+
+
+def check_open_report(report) -> None:
+    """Admission conservation on a finished serving report: every offered
+    query was either admitted or shed, and everything admitted completed."""
+    if not _ENABLED:
+        return
+    offered = int(report.offered)
+    admitted = int(report.admitted)
+    shed = int(report.shed)
+    completed = int(report.completed)
+    if offered != admitted + shed:
+        raise SanitizeError(
+            f"admission conservation broken: offered={offered} != "
+            f"admitted={admitted} + shed={shed}")
+    if completed != admitted:
+        raise SanitizeError(
+            f"admitted queries vanished: completed={completed} != "
+            f"admitted={admitted}")

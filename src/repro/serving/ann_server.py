@@ -95,6 +95,7 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
+from repro import sanitize
 from repro.core.device_model import SSDModel
 from repro.core.search_kernel import search_batched
 from repro.core.stats import QueryStats
@@ -970,8 +971,10 @@ class AnnServer:
         if n == 0:
             per_tenant = (self._per_tenant_report([], np.zeros(0), ac)
                           if multi_tenant else None)
-            return self._empty_open_report(rate_qps, duration_us, ac,
-                                           per_tenant, seed=run_seed)
+            report = self._empty_open_report(rate_qps, duration_us, ac,
+                                             per_tenant, seed=run_seed)
+            sanitize.check_open_report(report)
+            return report
         # arrival kinds: 0 = read, 1 = insert, 2 = delete. Reads index the
         # query pool round-robin BY READ ORDER, so a mutating mix serves
         # the same read sequence a pure-read run would
@@ -1024,6 +1027,11 @@ class AnnServer:
             pages = jrn.take_pending_io()
             if pages:
                 us = pages * wr_us
+                # REPRO_SANITIZE=1: priced durations are non-negative, so
+                # the background clock below can only move forward
+                sanitize.check(pages >= 0 and us >= 0.0,
+                               f"journal drain billed negative time: "
+                               f"{pages} pages, {us}us")
                 mu["free"] = max(mu["free"], t) + us
                 mu["io_us"] += us
                 mu["journal"] += pages
@@ -1033,6 +1041,10 @@ class AnnServer:
                 return
             us = (acct["pages_read"] * rd_us
                   + acct["pages_written"] * wr_us)
+            sanitize.check(us >= 0.0,
+                           f"background {kind} billed negative time: {us}us "
+                           f"(reads={acct['pages_read']}, "
+                           f"writes={acct['pages_written']})")
             mu["free"] = max(mu["free"], t) + us
             mu["io_us"] += us
             mu["reads"] += acct["pages_read"]
@@ -1145,13 +1157,15 @@ class AnnServer:
                                               np.asarray(lat_out), ac)
                       if multi_tenant else None)
         if completed == 0:
-            return self._empty_open_report(rate_qps, duration_us, ac,
-                                           per_tenant, extra=mut_kw,
-                                           seed=run_seed)
+            report = self._empty_open_report(rate_qps, duration_us, ac,
+                                             per_tenant, extra=mut_kw,
+                                             seed=run_seed)
+            sanitize.check_open_report(report)
+            return report
         all_stats = QueryStats.concat(stats_out)
         lat_arr = np.asarray(lat_out)
         slo = scfg.slo_p99_us
-        return OpenLoopReport(
+        report = OpenLoopReport(
             rate_qps=rate_qps, duration_us=duration_us, offered=n_reads,
             completed=completed, elapsed_us=t_end,
             qps=completed / (t_end * 1e-6) if t_end > 0 else 0.0,
@@ -1173,3 +1187,6 @@ class AnnServer:
             admitted=ac.admitted, shed=ac.shed, degraded=degraded_n,
             per_tenant=per_tenant, per_shard=shard_win.report(t_end),
             seed=run_seed, **mut_kw)
+        # REPRO_SANITIZE=1: offered == admitted + shed, completed == admitted
+        sanitize.check_open_report(report)
+        return report

@@ -73,6 +73,7 @@ from typing import List, Optional
 
 import numpy as np
 
+from repro import sanitize
 from repro.core.stats import QueryStats
 from repro.io import profile_from_counters
 from repro.mutation import Compactor, MutationMix
@@ -728,7 +729,7 @@ class FleetServer(AnnServer):
             pages_q = float(all_stats.page_reads.mean())
             issued_q = issued_total / completed
         slo = scfg.slo_p99_us
-        return FleetReport(
+        report = FleetReport(
             rate_qps=rate_qps, duration_us=duration_us, offered=n_reads,
             completed=completed, elapsed_us=t_end,
             qps=completed / (t_end * 1e-6) if t_end > 0 else 0.0,
@@ -766,3 +767,7 @@ class FleetServer(AnnServer):
             per_replica=per_replica,
             timeline=timeline or None,
             **mut_kw)
+        # REPRO_SANITIZE=1: the fleet keeps the same admission conservation
+        # as the single server (budget drops count as shed)
+        sanitize.check_open_report(report)
+        return report

@@ -1,0 +1,22 @@
+"""Type-check gate over the accounting-critical layers (mypy.ini scopes it
+to src/repro/io + src/repro/mutation with check_untyped_defs). The
+container image doesn't ship mypy, so this skips locally and runs in the
+CI lint job, which installs it."""
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+
+pytestmark = pytest.mark.fast
+
+
+def test_io_and_mutation_layers_typecheck():
+    pytest.importorskip("mypy", reason="mypy not installed (CI lint job "
+                                       "installs it)")
+    res = subprocess.run(
+        [sys.executable, "-m", "mypy", "--config-file", "mypy.ini"],
+        cwd=REPO, capture_output=True, text=True)
+    assert res.returncode == 0, res.stdout + res.stderr

@@ -1,0 +1,415 @@
+"""reprolint catches seeded contract violations and passes compliant code.
+
+Per rule (R001–R006): at least one true-positive fixture the rule must
+flag and one clean fixture it must not; plus suppression handling, CLI
+exit codes, JSON output, and the live-tree-is-clean gate the CI lint job
+relies on."""
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO))
+
+from tools.reprolint import all_rules, lint_source  # noqa: E402
+
+pytestmark = pytest.mark.fast
+
+
+def findings(src, path, rules=None):
+    return lint_source(textwrap.dedent(src), path, rules=rules)
+
+
+def rule_ids(src, path, rules=None):
+    return {f.rule_id for f in findings(src, path, rules=rules)}
+
+
+# ---------------------------------------------------------------------------
+# R001 conservation-spine
+
+
+R001_BAD = """
+    class LeakyStore:
+        def __init__(self, inner):
+            self.inner = inner
+            self.counters = None
+
+        def fetch(self, page_ids, vids=None):
+            return {"vids": [], "vecs": [], "nbrs": []}
+
+        def charge(self, page_ids):
+            self.counters.pages_fetched += len(page_ids)
+
+        def note_write(self, page_ids=None, kind="data", count=None):
+            pass
+"""
+
+R001_GOOD = """
+    class SpineStore:
+        def __init__(self, inner):
+            self.inner = inner
+            self.counters = None
+
+        def fetch(self, page_ids, vids=None):
+            return fetch_mirroring_inner(self.counters, self.inner,
+                                         page_ids, vids)
+
+        def charge(self, page_ids):
+            book_charged_reads(self.counters, len(page_ids), 4)
+            charge_inner_reads(self.inner, page_ids)
+
+        def note_write(self, page_ids=None, kind="data", count=None):
+            note_inner_writes(self.inner, page_ids, kind, count)
+
+    class DelegatingStore:
+        def __init__(self, inner):
+            self.inner = inner
+
+        def fetch(self, page_ids, vids=None):
+            return self._mirrored("fetch", page_ids, vids=vids)
+
+        def charge(self, page_ids):
+            self.inner.charge(page_ids)
+
+    class BaseStore:                      # no self.inner: nothing to forward
+        def fetch(self, page_ids, vids=None):
+            return {}
+"""
+
+
+def test_r001_flags_every_nonforwarding_method():
+    found = findings(R001_BAD, "src/repro/io/x.py", rules=["R001"])
+    assert len(found) == 3
+    assert {"fetch", "charge", "note_write"} == {
+        f.message.split()[0].split(".")[1] for f in found}
+
+
+def test_r001_accepts_forwarding_and_baseline_stores():
+    assert rule_ids(R001_GOOD, "src/repro/io/x.py", rules=["R001"]) == set()
+
+
+# ---------------------------------------------------------------------------
+# R002 journal-before-apply
+
+
+R002_BAD = """
+    class Idx:
+        def _journal_append(self, kind, payload, sync=False):
+            pass
+
+        def insert(self, vec):
+            self.delta.insert(7, vec)                 # apply before journal
+            self._journal_append("insert", vec)
+
+        def delete(self, vid):
+            self.deleted.add(vid)                     # never journals
+"""
+
+R002_GOOD = """
+    class Idx:
+        def _journal_append(self, kind, payload, sync=False):
+            pass
+
+        def insert(self, vec):
+            vec = list(vec)                           # pure prep is fine
+            self._journal_append("insert", vec)
+            self.delta.insert(7, vec)
+
+        def delete(self, vid):
+            vid = int(vid)
+            self._journal_append("delete", vid)
+            self.deleted.add(vid)
+
+        def flush(self):
+            self._journal_append("flush", None, sync=True)
+            self.dirty_pages.clear()
+
+        def compact(self, max_pages=None):
+            budget = max_pages or 4
+            self._journal_append("compact", budget, sync=True)
+            self.free_pages.extend([1, 2])
+
+    class NotJournaled:                 # no _journal_append: out of scope
+        def insert(self, vec):
+            self.delta.insert(7, vec)
+"""
+
+
+def test_r002_flags_apply_before_journal_and_missing_journal():
+    found = findings(R002_BAD, "src/repro/mutation/x.py", rules=["R002"])
+    msgs = " | ".join(f.message for f in found)
+    assert len(found) == 2
+    assert "before the journal append" in msgs   # insert
+    assert "never calls" in msgs                 # delete
+
+
+def test_r002_accepts_journal_first_methods():
+    assert rule_ids(R002_GOOD, "src/repro/mutation/x.py",
+                    rules=["R002"]) == set()
+
+
+# ---------------------------------------------------------------------------
+# R003 clock discipline
+
+
+R003_BAD = """
+    class Tracker:
+        def charge(self, model, n):
+            self.busy_us += 12.5                    # raw float: unpriced
+            self.exec_free = n * 3.0
+"""
+
+R003_GOOD = """
+    class Tracker:
+        def charge(self, model, n, win):
+            self.busy_us += n * model.read_service_us(4096)
+            self.exec_free = model.concurrent_latency_us(n, 1)
+            self.total_us = self.busy_us + win.bg_io_us   # re-aggregation
+            self.busy_us = 0.0                            # zero reset
+            self.measured_step_us = 1.25                  # measured channel
+"""
+
+
+def test_r003_flags_raw_clock_writes_outside_serving():
+    found = findings(R003_BAD, "src/repro/io/x.py", rules=["R003"])
+    assert len(found) == 2
+
+
+def test_r003_accepts_model_billed_and_serving_code():
+    assert rule_ids(R003_GOOD, "src/repro/io/x.py", rules=["R003"]) == set()
+    # the same raw writes are the serving layer's own business
+    assert rule_ids(R003_BAD, "src/repro/serving/x.py",
+                    rules=["R003"]) == set()
+
+
+# ---------------------------------------------------------------------------
+# R004 kernel purity
+
+
+R004_BAD = """
+    import jax
+
+    @jax.jit
+    def step(x):
+        t0 = time.perf_counter()
+        noise = np.random.default_rng()
+        jitter = random.random()
+        host = x.item()
+        return float(x) + t0 + jitter
+
+    def _scan_kernel(ref, out):
+        out[0] = ref[0] * random.random()
+
+    fused = pl.pallas_call(_scan_kernel, grid=(1,))
+"""
+
+R004_GOOD = """
+    import functools
+    import time
+
+    import jax
+
+    @functools.partial(jax.jit, static_argnames=("k",))
+    def step(x, k):
+        return x * k
+
+    def measure_step_us(store, queries):      # host-side harness: untraced
+        t0 = time.perf_counter()
+        rng = np.random.default_rng(17)
+        return time.perf_counter() - t0
+"""
+
+
+def test_r004_flags_impurity_in_traced_and_pallas_regions():
+    found = findings(R004_BAD, "src/repro/kernels/x.py", rules=["R004"])
+    msgs = " | ".join(f.message for f in found)
+    assert "wall clock" in msgs
+    assert "host RNG" in msgs
+    assert ".item()" in msgs
+    assert "float()" in msgs
+    assert any("_scan_kernel" in f.message for f in found)  # pallas body
+
+
+def test_r004_accepts_pure_kernels_and_host_harness():
+    assert rule_ids(R004_GOOD, "src/repro/kernels/x.py",
+                    rules=["R004"]) == set()
+    # same impure source outside the kernel dirs is out of scope
+    assert rule_ids(R004_BAD, "src/repro/io/x.py", rules=["R004"]) == set()
+
+
+# ---------------------------------------------------------------------------
+# R005 report-schema stability
+
+
+R005_BAD = """
+    class Report:
+        def row(self):
+            row = {"qps": 1.0}
+            for t, stats in self.per_tenant.items():     # unordered iter
+                row[f"t{t}_p99"] = stats
+            key = self.pick()
+            row[key] = 0.0                               # dynamic key
+            return row
+"""
+
+R005_GOOD = """
+    class Report:
+        def row(self):
+            row = {"qps": 1.0, "p99_latency_us": 2.0}
+            for t, stats in sorted(self.per_tenant.items()):
+                for k in ("mean", "p99"):
+                    row[f"t{t}_{k}"] = stats[k]
+            row.update(_tenant_columns(self.per_tenant))
+            return row
+
+    def _tenant_columns(per_tenant):
+        return {f"t{t}_hit": v for t, v in sorted(per_tenant.items())}
+"""
+
+
+def test_r005_flags_unordered_and_dynamic_keys():
+    found = findings(R005_BAD, "src/repro/serving/x.py", rules=["R005"])
+    msgs = " | ".join(f.message for f in found)
+    assert len(found) == 2
+    assert "isn't pinned" in msgs
+    assert "dynamic column key" in msgs
+
+
+def test_r005_accepts_constant_and_sorted_fstring_keys():
+    assert rule_ids(R005_GOOD, "src/repro/serving/x.py",
+                    rules=["R005"]) == set()
+
+
+# ---------------------------------------------------------------------------
+# R006 seeded RNG
+
+
+R006_BAD = """
+    import random
+
+    import numpy as np
+
+    def bench():
+        gen = np.random.default_rng()          # unseeded
+        np.random.seed(0)                      # legacy global
+        xs = np.random.rand(8)
+        pick = random.choice([1, 2, 3])        # stdlib global
+        return gen, xs, pick
+"""
+
+R006_GOOD = """
+    import numpy as np
+
+    def bench(seed=17):
+        gen = np.random.default_rng(seed)
+        sub = np.random.default_rng(gen.integers(2**31))
+        jkey = jax.random.PRNGKey(seed)        # jax.random is not random.*
+        local = gen.random(8)                  # Generator method, not global
+        return gen, sub, jkey, local
+"""
+
+
+def test_r006_flags_unseeded_and_global_rngs():
+    found = findings(R006_BAD, "benchmarks/x.py", rules=["R006"])
+    assert len(found) == 4
+
+
+def test_r006_accepts_seeded_generators_and_ignores_src():
+    assert rule_ids(R006_GOOD, "tests/x.py", rules=["R006"]) == set()
+    # src/ RNG construction is governed by its own seeding conventions
+    assert rule_ids(R006_BAD, "src/repro/core/x.py", rules=["R006"]) == set()
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+
+
+def test_line_suppression_silences_one_line_only():
+    src = """
+    class Idx:
+        def _journal_append(self, kind, payload):
+            pass
+
+        def insert(self, vec):    # reprolint: disable=R002
+            self.delta.insert(7, vec)
+
+        def delete(self, vid):
+            self.deleted.add(vid)
+    """
+    found = findings(src, "src/repro/mutation/x.py", rules=["R002"])
+    assert len(found) == 1 and "delete" in found[0].message
+
+
+def test_file_suppression_and_multi_rule_disable():
+    body = """
+    # reprolint: disable-file=R006
+    import numpy as np
+    gen = np.random.default_rng()
+    """
+    assert rule_ids(body, "tests/x.py") == set()
+    line = """
+    import numpy as np
+    gen = np.random.default_rng()   # reprolint: disable=R001,R006
+    """
+    assert rule_ids(line, "tests/x.py") == set()
+
+
+def test_syntax_error_is_reported_not_crashed():
+    found = lint_source("def broken(:\n", "src/x.py")
+    assert len(found) == 1 and found[0].rule_id == "E000"
+
+
+# ---------------------------------------------------------------------------
+# CLI
+
+
+def run_cli(*argv, cwd=REPO):
+    return subprocess.run(
+        [sys.executable, "-m", "tools.reprolint", *argv],
+        cwd=cwd, capture_output=True, text=True)
+
+
+def test_cli_exit_codes_and_json(tmp_path):
+    bad = tmp_path / "tests"
+    bad.mkdir()
+    (bad / "bench.py").write_text(
+        "import numpy as np\ngen = np.random.default_rng()\n")
+    clean = tmp_path / "clean.py"
+    clean.write_text("x = 1\n")
+
+    ok = run_cli(str(clean))
+    assert ok.returncode == 0 and "clean" in ok.stdout
+
+    dirty = run_cli("--format", "json", str(bad))
+    assert dirty.returncode == 1
+    doc = json.loads(dirty.stdout)
+    assert doc["total"] == 1 and doc["counts"] == {"R006": 1}
+    assert doc["findings"][0]["rule"] == "R006"
+
+    usage = run_cli()
+    assert usage.returncode == 2
+
+    unknown = run_cli("--rules", "R999", str(clean))
+    assert unknown.returncode == 2 and "unknown rule" in unknown.stderr
+
+
+def test_cli_lists_all_six_rules():
+    out = run_cli("--list-rules")
+    assert out.returncode == 0
+    for rid in ("R001", "R002", "R003", "R004", "R005", "R006"):
+        assert rid in out.stdout
+    assert set(all_rules()) == {"R001", "R002", "R003", "R004", "R005",
+                                "R006"}
+
+
+# ---------------------------------------------------------------------------
+# the gate CI enforces: the live tree is clean
+
+
+def test_live_tree_is_clean():
+    res = run_cli("src", "tests", "benchmarks")
+    assert res.returncode == 0, res.stdout + res.stderr

@@ -1,0 +1,116 @@
+"""REPRO_SANITIZE runtime sanitizer: armed, it trips on injected
+monotonicity / write-conservation / admission-conservation violations at
+the exact boundary; disarmed (the default), the hooks cost nothing and
+let legacy downward resets through. Real store stacks run clean under it
+(the whole fast tier is re-run with REPRO_SANITIZE=1 in CI)."""
+import os
+import subprocess
+import sys
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro import sanitize
+from repro.io import ArrayPageStore, BatchedPageStore, CachedPageStore
+from repro.core.pages import build_layout
+from repro.io.page_store import StoreCounters, book_writes
+
+pytestmark = pytest.mark.fast
+
+
+@pytest.fixture()
+def armed():
+    prev = sanitize.set_enabled(True)
+    yield
+    sanitize.set_enabled(prev)
+
+
+@pytest.fixture()
+def tiny_layout():
+    rng = np.random.default_rng(3)
+    n, d, R = 64, 8, 4
+    vectors = rng.normal(size=(n, d)).astype(np.float32)
+    graph = rng.integers(0, n, (n, R)).astype(np.int32)
+    return build_layout(vectors, graph, page_bytes=256)
+
+
+def test_monotonicity_trip_on_counter_decrement(armed):
+    c = StoreCounters()
+    c.pages_fetched = 5
+    with pytest.raises(sanitize.SanitizeError, match="moved backward"):
+        c.pages_fetched -= 1
+    with pytest.raises(sanitize.SanitizeError, match="negative"):
+        c.cache_hits = -2
+
+
+def test_write_conservation_trip(armed):
+    c = StoreCounters()
+    book_writes(c, 3, "journal")          # legitimate booking: clean
+    # corrupt one side of the invariant behind the sanitizer's back — the
+    # next booking boundary must catch it
+    object.__setattr__(c, "journal_writes", 0)
+    with pytest.raises(sanitize.SanitizeError,
+                       match="write conservation broken"):
+        book_writes(c, 1, "data")
+
+
+def test_reset_is_exempt_and_disabled_mode_is_silent(armed):
+    c = StoreCounters()
+    c.pages_fetched = 5
+    c.reset()                              # downward, but sanctioned
+    assert c.pages_fetched == 0
+    sanitize.set_enabled(False)
+    c.pages_fetched = 5
+    c.pages_fetched -= 1                   # disarmed: legacy behaviour
+    assert c.pages_fetched == 4
+
+
+def test_admission_conservation_trip(armed):
+    ok = SimpleNamespace(offered=10, admitted=7, shed=3, completed=7)
+    sanitize.check_open_report(ok)
+    lost = SimpleNamespace(offered=10, admitted=7, shed=2, completed=7)
+    with pytest.raises(sanitize.SanitizeError,
+                       match="admission conservation broken"):
+        sanitize.check_open_report(lost)
+    vanished = SimpleNamespace(offered=10, admitted=7, shed=3, completed=6)
+    with pytest.raises(sanitize.SanitizeError, match="vanished"):
+        sanitize.check_open_report(vanished)
+
+
+def test_real_store_stack_runs_clean_under_sanitizer(armed, tiny_layout):
+    store = BatchedPageStore(
+        CachedPageStore(ArrayPageStore(tiny_layout),
+                        np.zeros(tiny_layout.vid2page.shape[0], bool)))
+    vids = np.asarray([2, 40, 50, 2])
+    store.fetch(tiny_layout.vid2page[vids], vids=vids)
+    store.charge([0, 1])
+    store.note_write([0], kind="data")
+    store.note_write(kind="journal", count=2)
+    store.note_write(kind="snapshot", count=1)
+    for c in (store.counters, store.inner.counters,
+              store.inner.inner.counters):
+        d = c.as_dict()
+        assert (d["pages_written"]
+                == d["data_writes"] + d["journal_writes"]
+                + d["snapshot_writes"])
+    store.counters.reset()
+
+
+def test_env_var_arms_the_sanitizer():
+    env = dict(os.environ, REPRO_SANITIZE="1",
+               PYTHONPATH="src" + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    code = ("from repro import sanitize; assert sanitize.enabled(); "
+            "from repro.io.page_store import StoreCounters\n"
+            "c = StoreCounters(); c.pages_fetched = 1\n"
+            "try:\n"
+            "    c.pages_fetched = 0\n"
+            "except sanitize.SanitizeError:\n"
+            "    print('TRIPPED')\n")
+    out = subprocess.run([sys.executable, "-c", code],
+                         capture_output=True, text=True, env=env,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))))
+    assert out.returncode == 0, out.stderr
+    assert "TRIPPED" in out.stdout

@@ -1,0 +1,1 @@
+"""Repo tooling: reprolint (contract checker) and check_links."""

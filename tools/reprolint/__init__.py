@@ -1,0 +1,35 @@
+"""reprolint — AST contract checker for the repo's measurement invariants.
+
+Every number this repo reports rests on a handful of conventions that
+ordinary tests only probe after the fact: stores must forward reads and
+writes down the conservation spine, mutations must hit the journal before
+they touch state, device time may only be billed through the SSD model,
+kernels must stay pure under tracing, report schemas must stay stable, and
+RNGs must be seeded.  reprolint turns those conventions into machine-checked
+rules (R001–R006, catalogued in docs/contracts.md) that run over the source
+tree in CI:
+
+    python -m tools.reprolint src tests benchmarks
+
+Suppress a finding with a trailing ``# reprolint: disable=R001`` (comma
+separated for several rules) on the flagged line, or exempt a whole file
+with ``# reprolint: disable-file=R001`` on its own line.
+"""
+from tools.reprolint.core import (  # noqa: F401
+    Finding,
+    Rule,
+    all_rules,
+    lint_paths,
+    lint_source,
+    rule,
+)
+from tools.reprolint import rules  # noqa: F401  (registers R001–R006)
+
+__all__ = [
+    "Finding",
+    "Rule",
+    "all_rules",
+    "lint_paths",
+    "lint_source",
+    "rule",
+]

@@ -1,0 +1,55 @@
+"""CLI: ``python -m tools.reprolint src tests benchmarks``.
+
+Exit codes: 0 = clean, 1 = findings reported, 2 = usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+from tools.reprolint import rules  # noqa: F401  (registers R001–R006)
+from tools.reprolint.core import all_rules, lint_paths
+from tools.reprolint.reporters import render_json, render_text
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.reprolint",
+        description="contract checker for the repo's measurement "
+                    "invariants (rule catalog: docs/contracts.md)")
+    ap.add_argument("paths", nargs="*",
+                    help="files or directories to lint")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule ids to run (default: all)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the registered rules and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid, cls in all_rules().items():
+            print(f"{rid} {cls.name}: {cls.description}")
+        return 0
+    if not args.paths:
+        ap.print_usage(sys.stderr)
+        print("error: no paths given (try: src tests benchmarks)",
+              file=sys.stderr)
+        return 2
+    wanted = None
+    if args.rules:
+        wanted = [r.strip() for r in args.rules.split(",") if r.strip()]
+        unknown = sorted(set(wanted) - set(all_rules()))
+        if unknown:
+            print(f"error: unknown rule id(s): {', '.join(unknown)}",
+                  file=sys.stderr)
+            return 2
+
+    findings = lint_paths(args.paths, rules=wanted)
+    render = render_json if args.format == "json" else render_text
+    print(render(findings))
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,183 @@
+"""reprolint core: findings, the rule registry, suppressions, and drivers.
+
+A rule is a class with a ``check(tree, src)`` method yielding `Finding`s;
+registering it is one decorator::
+
+    @rule
+    class R999Example(Rule):
+        rule_id = "R999"
+        name = "example"
+        description = "what the invariant is"
+
+        def check(self, tree, src):
+            yield self.finding(node, "message")
+
+Suppressions are comment-driven so they live next to the code they excuse:
+
+- ``# reprolint: disable=R001`` (or ``disable=R001,R003``) on the flagged
+  line silences those rules for that line only;
+- ``# reprolint: disable-file=R001`` anywhere in a file silences the rule
+  for the whole file (use sparingly — the catalog in docs/contracts.md asks
+  every suppression to carry a justification in prose nearby).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Set
+
+_DISABLE_LINE = re.compile(r"#\s*reprolint:\s*disable=([A-Z0-9,\s]+)")
+_DISABLE_FILE = re.compile(r"#\s*reprolint:\s*disable-file=([A-Z0-9,\s]+)")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One rule violation at a specific source location."""
+
+    rule_id: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def as_dict(self) -> Dict[str, object]:
+        return {
+            "rule": self.rule_id,
+            "path": self.path,
+            "line": self.line,
+            "col": self.col,
+            "message": self.message,
+        }
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule_id} {self.message}"
+
+
+class Rule:
+    """Base class for reprolint rules.
+
+    Subclasses set `rule_id` / `name` / `description` and implement
+    `check(tree, src)`; `self.path` holds the file being linted (rules that
+    only apply to a subtree — kernels, serving — gate on it).
+    """
+
+    rule_id: str = ""
+    name: str = ""
+    description: str = ""
+
+    def __init__(self, path: str):
+        self.path = path
+
+    def check(self, tree: ast.Module, src: str) -> Iterator[Finding]:
+        raise NotImplementedError
+
+    def finding(self, node: ast.AST, message: str) -> Finding:
+        return Finding(
+            rule_id=self.rule_id,
+            path=self.path,
+            line=getattr(node, "lineno", 0),
+            col=getattr(node, "col_offset", 0),
+            message=message,
+        )
+
+
+_REGISTRY: Dict[str, type] = {}
+
+
+def rule(cls: type) -> type:
+    """Class decorator registering a Rule subclass under its rule_id."""
+    rid = getattr(cls, "rule_id", "")
+    if not rid:
+        raise ValueError(f"{cls.__name__} has no rule_id")
+    if rid in _REGISTRY:
+        raise ValueError(f"duplicate rule id {rid}")
+    _REGISTRY[rid] = cls
+    return cls
+
+
+def all_rules() -> Dict[str, type]:
+    """rule_id -> Rule subclass, in registration order."""
+    return dict(_REGISTRY)
+
+
+@dataclass
+class _Suppressions:
+    file_wide: Set[str] = field(default_factory=set)
+    by_line: Dict[int, Set[str]] = field(default_factory=dict)
+
+    def active(self, rule_id: str, line: int) -> bool:
+        if rule_id in self.file_wide:
+            return True
+        return rule_id in self.by_line.get(line, set())
+
+
+def _parse_suppressions(src: str) -> _Suppressions:
+    sup = _Suppressions()
+    for lineno, text in enumerate(src.splitlines(), start=1):
+        m = _DISABLE_FILE.search(text)
+        if m:
+            sup.file_wide.update(
+                r.strip() for r in m.group(1).split(",") if r.strip())
+            continue
+        m = _DISABLE_LINE.search(text)
+        if m:
+            ids = {r.strip() for r in m.group(1).split(",") if r.strip()}
+            sup.by_line.setdefault(lineno, set()).update(ids)
+    return sup
+
+
+def lint_source(
+    src: str,
+    path: str,
+    rules: Optional[Sequence[str]] = None,
+) -> List[Finding]:
+    """Lint one source string as if it lived at `path`.
+
+    `rules` restricts the run to specific rule ids (default: all).
+    Unparseable files yield a single synthetic E000 finding rather than
+    crashing the run — a syntax error is itself a contract violation.
+    """
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as exc:
+        return [Finding("E000", path, exc.lineno or 0, exc.offset or 0,
+                        f"syntax error: {exc.msg}")]
+    sup = _parse_suppressions(src)
+    wanted = set(rules) if rules is not None else None
+    out: List[Finding] = []
+    for rid, cls in _REGISTRY.items():
+        if wanted is not None and rid not in wanted:
+            continue
+        checker = cls(path)
+        for f in checker.check(tree, src):
+            if not sup.active(f.rule_id, f.line):
+                out.append(f)
+    out.sort(key=lambda f: (f.path, f.line, f.col, f.rule_id))
+    return out
+
+
+def iter_python_files(paths: Iterable[str]) -> Iterator[Path]:
+    for raw in paths:
+        p = Path(raw)
+        if p.is_dir():
+            yield from sorted(p.rglob("*.py"))
+        elif p.suffix == ".py":
+            yield p
+
+
+def lint_paths(
+    paths: Sequence[str],
+    rules: Optional[Sequence[str]] = None,
+) -> List[Finding]:
+    """Lint every .py file under `paths` (files or directories)."""
+    out: List[Finding] = []
+    for f in iter_python_files(paths):
+        try:
+            src = f.read_text()
+        except OSError as exc:
+            out.append(Finding("E001", str(f), 0, 0, f"unreadable: {exc}"))
+            continue
+        out.extend(lint_source(src, str(f), rules=rules))
+    return out

@@ -1,0 +1,28 @@
+"""Render reprolint findings as text (default) or JSON (for CI tooling)."""
+from __future__ import annotations
+
+import json
+from collections import Counter
+from typing import List
+
+from tools.reprolint.core import Finding
+
+
+def render_text(findings: List[Finding]) -> str:
+    if not findings:
+        return "reprolint: clean"
+    lines = [f.render() for f in findings]
+    by_rule = Counter(f.rule_id for f in findings)
+    summary = ", ".join(f"{rid}: {n}" for rid, n in sorted(by_rule.items()))
+    lines.append(f"reprolint: {len(findings)} finding(s) ({summary})")
+    return "\n".join(lines)
+
+
+def render_json(findings: List[Finding]) -> str:
+    by_rule = Counter(f.rule_id for f in findings)
+    doc = {
+        "findings": [f.as_dict() for f in findings],
+        "counts": dict(sorted(by_rule.items())),
+        "total": len(findings),
+    }
+    return json.dumps(doc, indent=2)
