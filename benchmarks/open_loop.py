@@ -13,6 +13,12 @@ subsystem's policy space, reporting qps / p99 / hit-rate per cell.
 Env knobs (see benchmarks/common.py for the dataset sizing ones):
   REPRO_OL_RATES      comma-separated arrival rates in QPS
   REPRO_OL_DURATION   arrival window in us of virtual time
+
+`--trace out.json` (or REPRO_OL_TRACE) records the sweep's FIRST cell
+(lowest rate, first policy) as a Perfetto-loadable Chrome trace — one
+cell, not the whole sweep, so the trace stays one server's coherent
+virtual timeline. The export is validated (span balance, flow
+resolution, latency conservation) before it is written.
 """
 from __future__ import annotations
 
@@ -20,6 +26,7 @@ import os
 
 from benchmarks import common
 from repro.core import get_preset, recall_at_k
+from repro.obs import Tracer, validate_chrome_trace
 from repro.serving import AnnServer, ServerConfig
 
 RATES = tuple(float(r) for r in os.environ.get(
@@ -37,7 +44,7 @@ SYSTEMS = ("starling", "pipeann")   # storage-centric vs hybrid
 
 def sweep(name: str, preset: str, rates=RATES, policies=POLICIES,
           L: int = 32, duration_us: float = DURATION_US, max_batch: int = 16,
-          slo_p99_us: float = None, **over):
+          slo_p99_us: float = None, tracer: Tracer = None, **over):
     ds = common.dataset(name)
     cfg = get_preset(preset, L=L, **over)
     idx = common.index(name, preset, **over)
@@ -50,8 +57,13 @@ def sweep(name: str, preset: str, rates=RATES, policies=POLICIES,
                 max_batch=max_batch, cache_policy=policy,
                 cache_bytes=pages * idx.layout.page_bytes,
                 prefetch=prefetch, slo_p99_us=slo_p99_us))
+            # trace exactly one cell (the first still-empty tracer wins):
+            # a trace is one virtual timeline, not a pile of sweep cells
+            cell_tr = tracer if tracer is not None and not len(tracer) \
+                else None
             rep = server.serve_open_loop(ds.queries, rate_qps=rate,
-                                         duration_us=duration_us)
+                                         duration_us=duration_us,
+                                         tracer=cell_tr)
             rec = (recall_at_k(rep.stats.ids, ds.gt[rep.query_indices], cfg.k)
                    if rep.completed else 0.0)
             rows.append({"dataset": name, "system": preset, "L": L,
@@ -62,13 +74,23 @@ def sweep(name: str, preset: str, rates=RATES, policies=POLICIES,
 
 
 def main(datasets=("sift-like",), systems=SYSTEMS, rates=RATES,
-         policies=POLICIES, L: int = 32, duration_us: float = DURATION_US):
+         policies=POLICIES, L: int = 32, duration_us: float = DURATION_US,
+         trace_out: str = None):
+    tracer = Tracer() if trace_out else None
     rows = []
     for ds in datasets:
         for sysname in systems:
             rows.extend(sweep(ds, sysname, rates=rates, policies=policies,
-                              L=L, duration_us=duration_us))
+                              L=L, duration_us=duration_us, tracer=tracer))
     common.print_table(rows)
+    if tracer is not None:
+        problems = validate_chrome_trace(tracer.to_chrome())
+        assert problems == [], f"trace invalid: {problems[:5]}"
+        tracer.export(trace_out)
+        s = tracer.summary()
+        print(f"# wrote {trace_out}: {len(tracer)} spans, "
+              f"{s.queries} queries, max residual "
+              f"{s.max_residual_us:.2e}us")
 
     # the §8 crossover: best system per (rate, policy) at the extremes
     for ds in datasets:
@@ -94,4 +116,9 @@ def main(datasets=("sift-like",), systems=SYSTEMS, rates=RATES,
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--trace", default=os.environ.get("REPRO_OL_TRACE"),
+                    metavar="OUT.json",
+                    help="record the first sweep cell as a Chrome trace")
+    main(trace_out=ap.parse_args().trace)

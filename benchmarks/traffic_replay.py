@@ -54,6 +54,9 @@ Env knobs (dataset sizing in benchmarks/common.py):
   REPRO_FLEET_OUT       artifact path   (default benchmarks/artifacts/
                                          BENCH_fleet.json)
   REPRO_FLEET_GUARD     assert the three verdicts (default 1)
+  REPRO_FLEET_TRACE     (or --trace) write the migration-ON run as a
+                        Perfetto-loadable Chrome trace; validated before
+                        writing, verdict recorded in the JSON artifact
 """
 from __future__ import annotations
 
@@ -67,6 +70,7 @@ from benchmarks import common
 from benchmarks.updates import insert_pool
 from repro.core import get_preset, recall_at_k
 from repro.mutation import MutableIndex, MutationConfig, MutationMix
+from repro.obs import Tracer, validate_chrome_trace
 from repro.serving import (AutoscaleConfig, FleetConfig, FleetServer,
                            MigrationConfig, ServerConfig)
 
@@ -173,10 +177,13 @@ def goodput_scaling(name: str) -> dict:
 
 # -- scenario 2: hot-page migration under the diurnal peak -------------------
 
-def migration_ab(name: str, base: float, peak: float) -> dict:
+def migration_ab(name: str, base: float, peak: float,
+                 tracer: Tracer = None) -> dict:
     """Same trace, same seed, contiguous base placement; migration on vs
     off. Results are bit-identical (recall matched by construction); the
-    rebalancer must buy a strictly lower p99."""
+    rebalancer must buy a strictly lower p99. A tracer, when given,
+    records the migration-ON run (the one with background copy waves on
+    its migration tracks)."""
     ds = common.dataset(name)
     cfg = get_preset(SYSTEM, L=L)
     idx = common.index(name, SYSTEM)
@@ -200,7 +207,8 @@ def migration_ab(name: str, base: float, peak: float) -> dict:
         rep = srv.serve_fleet(
             trace["pool"], rate_qps=trace["rate_qps"],
             duration_us=DURATION_US, seed=TRACE_SEED,
-            tenants=trace["tenants"], arrivals=trace["arrivals"])
+            tenants=trace["tenants"], arrivals=trace["arrivals"],
+            tracer=tracer if tag == "on" else None)
         rec = recall_at_k(
             rep.stats.ids, ds.gt[trace["ids"][rep.query_indices]], cfg.k)
         out[tag] = {**_fleet_row(f"migration_{tag}", rep),
@@ -265,7 +273,8 @@ def autoscale_tracking(name: str, base: float, peak: float) -> dict:
             "tracked": rep.groups_added >= 1 and rep.groups_dropped >= 1}
 
 
-def main(name: str = "sift-like") -> dict:
+def main(name: str = "sift-like", trace_out: str = None) -> dict:
+    tracer = Tracer() if trace_out else None
     scaling = goodput_scaling(name)
     # calibrate the day curve off the MEASURED single-group saturation
     # goodput: base well under one group (quiet tail a grown fleet must
@@ -285,9 +294,18 @@ def main(name: str = "sift-like") -> dict:
                    "base_qps": base, "peak_qps": peak,
                    "sat1_qps": round(sat1, 1), "trace_seed": TRACE_SEED},
         "goodput_scaling": scaling,
-        "migration": migration_ab(name, base, peak),
+        "migration": migration_ab(name, base, peak, tracer=tracer),
         "autoscale": autoscale_tracking(name, base, peak),
     }
+    if tracer is not None:
+        problems = validate_chrome_trace(tracer.to_chrome())
+        tracer.export(trace_out)
+        s = tracer.summary()
+        result["trace"] = {
+            "path": str(trace_out), "spans": len(tracer),
+            "queries": s.queries, "batches": s.batches,
+            "max_residual_us": s.max_residual_us,
+            "valid": problems == [], "problems": problems[:10]}
     rows = (result["goodput_scaling"]["rows"]
             + result["migration"]["rows"]
             + result["autoscale"]["rows"])
@@ -307,6 +325,11 @@ def main(name: str = "sift-like") -> dict:
           f"(+{result['autoscale']['groups_added']} "
           f"-{result['autoscale']['groups_dropped']}, in-band "
           f"{result['autoscale']['in_band_frac']})")
+    if "trace" in result:
+        t = result["trace"]
+        print(f"# trace: {t['path']} ({t['spans']} spans, "
+              f"{t['queries']} queries, residual "
+              f"{t['max_residual_us']:.2e}us, valid={t['valid']})")
     OUT.parent.mkdir(parents=True, exist_ok=True)
     OUT.write_text(json.dumps(result, indent=2))
     print(f"# wrote {OUT}")
@@ -319,8 +342,16 @@ def main(name: str = "sift-like") -> dict:
             "migration must not change search results"
         assert result["autoscale"]["tracked"], \
             "autoscaler must add on the ramp and drop after the peak"
+        if "trace" in result:
+            assert result["trace"]["valid"], \
+                f"trace invalid: {result['trace']['problems']}"
     return result
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--trace", default=os.environ.get("REPRO_FLEET_TRACE"),
+                    metavar="OUT.json",
+                    help="record the migration-ON run as a Chrome trace")
+    main(trace_out=ap.parse_args().trace)

@@ -1,0 +1,26 @@
+"""Observability layer: span tracing, metrics, Chrome trace export.
+
+See docs/observability.md for the span taxonomy, the trace-event
+schema, and the histogram error-bound derivation.
+"""
+from repro.obs.export import to_chrome_trace
+from repro.obs.metrics import (DEFAULT_GROWTH, DEFAULT_LO, Counter, Gauge,
+                               Histogram, MetricsRegistry)
+from repro.obs.tracer import PHASE_CATS, Span, Tracer, TraceSummary
+from repro.obs.validate import CONSERVATION_TOL_US, validate_chrome_trace
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "DEFAULT_GROWTH",
+    "DEFAULT_LO",
+    "Span",
+    "Tracer",
+    "TraceSummary",
+    "PHASE_CATS",
+    "to_chrome_trace",
+    "validate_chrome_trace",
+    "CONSERVATION_TOL_US",
+]

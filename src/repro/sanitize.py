@@ -26,7 +26,7 @@ from __future__ import annotations
 import os
 
 __all__ = ["SanitizeError", "enabled", "set_enabled", "check",
-           "check_counters", "check_open_report"]
+           "check_counters", "check_open_report", "check_attribution"]
 
 
 class SanitizeError(AssertionError):
@@ -90,3 +90,35 @@ def check_open_report(report) -> None:
         raise SanitizeError(
             f"admitted queries vanished: completed={completed} != "
             f"admitted={admitted}")
+
+
+def check_attribution(queue_us, service_us, interference_us,
+                      latency_us, tol_us: float = 1e-3) -> None:
+    """Latency conservation on per-query phase arrays: each phase is
+    non-negative and ``queue + service + interference == latency`` within
+    ``tol_us`` — every microsecond of a reported latency is attributed,
+    none is invented. Called before any open-loop/fleet report returns."""
+    if not _ENABLED:
+        return
+    import numpy as np
+    q = np.asarray(queue_us, dtype=np.float64)
+    s = np.asarray(service_us, dtype=np.float64)
+    i = np.asarray(interference_us, dtype=np.float64)
+    lat = np.asarray(latency_us, dtype=np.float64)
+    if not (q.shape == s.shape == i.shape == lat.shape):
+        raise SanitizeError(
+            f"attribution arrays disagree on shape: queue={q.shape} "
+            f"service={s.shape} interference={i.shape} latency={lat.shape}")
+    for name, arr in (("queue", q), ("service", s), ("interference", i)):
+        if arr.size and float(arr.min()) < -tol_us:
+            raise SanitizeError(
+                f"negative {name} time: min={float(arr.min())}us")
+    if q.size:
+        resid = np.abs(q + s + i - lat)
+        worst = int(np.argmax(resid))
+        if float(resid[worst]) > tol_us:
+            raise SanitizeError(
+                f"latency attribution broken at query {worst}: "
+                f"queue={q[worst]} + service={s[worst]} + "
+                f"interference={i[worst]} != latency={lat[worst]} "
+                f"(residual {float(resid[worst])}us)")

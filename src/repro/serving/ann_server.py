@@ -101,6 +101,7 @@ from repro.core.search_kernel import search_batched
 from repro.core.stats import QueryStats
 from repro.io import DYNAMIC_POLICIES, PLACEMENTS, build_store
 from repro.mutation import Compactor, MutableIndex, MutationMix
+from repro.obs import Histogram, Tracer
 from repro.serving.admission import AdmissionConfig, AdmissionController
 
 
@@ -212,6 +213,19 @@ def _measured_step(stats: QueryStats) -> float:
     return float(np.mean(stats.measured_step_us))
 
 
+def _latency_summary(lat_arr) -> Tuple[Histogram, float, float, float]:
+    """(histogram, mean, p50, p99) for a latency sample — the ONE
+    implementation behind every report percentile (repro.obs.Histogram,
+    quantiles within `Histogram.error_bound` ~0.1% of the exact order
+    statistic). The empty case degrades to finite zeros with the same
+    schema, where np.percentile would raise on a zero-length array —
+    the zero-admitted open-loop path reports through here too."""
+    h = Histogram.from_values(lat_arr, name="latency_us")
+    mean = h.mean if h.count else 0.0
+    return (h, mean, h.quantile(0.5, default=0.0),
+            h.quantile(0.99, default=0.0))
+
+
 def _tenant_columns(per_tenant: Optional[dict]) -> dict:
     """Flatten the per-tenant report rows into t<N>_* columns so `row()`
     carries the multi-tenant outcome into the benchmark tables (previously
@@ -259,6 +273,7 @@ class ServingReport:
     query_indices: np.ndarray    # (queries,) index into the submitted pool
     cache_hit_rate: float = 0.0  # stateful-policy hits / requested
     overlap_frac: float = 0.0    # prefetched fraction of issued reads
+    p50_latency_us: float = 0.0  # histogram median (repro.obs.Histogram)
     measured_step_us: float = 0.0    # mean MEASURED fused-kernel wall clock
     #                                  per query (pipeline="fused" only) —
     #                                  sits next to mean_latency_us (modeled)
@@ -274,6 +289,7 @@ class ServingReport:
             "workers": self.workers, "queries": self.queries,
             "qps": round(self.qps, 1),
             "mean_latency_us": round(self.mean_latency_us, 1),
+            "p50_latency_us": round(self.p50_latency_us, 1),
             "p99_latency_us": round(self.p99_latency_us, 1),
             "mean_batch": round(self.mean_batch_size, 2),
             "pages_per_query": round(self.pages_per_query, 2),
@@ -315,6 +331,18 @@ class OpenLoopReport:
     admitted: int = 0            # offered == admitted + shed
     shed: int = 0                # token-bucket + queue-policy drops
     degraded: int = 0            # queries served at a degraded level
+    # --- latency attribution (repro.obs; REPRO_SANITIZE-checked) ---
+    p50_latency_us: float = 0.0  # histogram median (repro.obs.Histogram)
+    mean_queue_us: float = 0.0   # arrival -> earliest batcher dispatch
+    mean_service_us: float = 0.0  # dispatch -> completion (device + compute)
+    mean_interference_us: float = 0.0   # extra wait attributed to background
+    #                              work holding the device (journal drain,
+    #                              flush/compaction; fleet: bg clocks)
+    attribution: Optional[dict] = None  # per-query float64 arrays, completion
+    #                              order: {queue_us, service_us,
+    #                              interference_us, latency_us} — each row
+    #                              sums exactly (queue + service +
+    #                              interference == latency)
     per_tenant: Optional[dict] = None   # {tenant: {offered, admitted, shed,
     #                                     completed, latency, hit rates}}
     per_shard: Optional[dict] = None    # {shard: {issued, load_frac,
@@ -357,7 +385,11 @@ class OpenLoopReport:
             "shed": self.shed,
             "degraded": self.degraded,
             "mean_latency_us": round(self.mean_latency_us, 1),
+            "p50_latency_us": round(self.p50_latency_us, 1),
             "p99_latency_us": round(self.p99_latency_us, 1),
+            "mean_queue_us": round(self.mean_queue_us, 1),
+            "mean_service_us": round(self.mean_service_us, 1),
+            "mean_interference_us": round(self.mean_interference_us, 1),
             "mean_batch": round(self.mean_batch_size, 2),
             "pages_per_query": round(self.pages_per_query, 2),
             "issued_pages_per_query": round(self.issued_pages_per_query, 2),
@@ -528,12 +560,15 @@ class AnnServer:
 
     # -- batch executor ------------------------------------------------------
 
-    def _execute(self, qvecs: np.ndarray, cfg=None) -> QueryStats:
+    def _execute(self, qvecs: np.ndarray, cfg=None,
+                 collect: bool = False) -> QueryStats:
         """Run one batch through the kernel, padded to max_batch so the jit
         cache holds exactly one entry per (config, max_batch) — `cfg`
         overrides the server's config for degraded dispatches (one more jit
         entry per degrade level). Stateful cache policies additionally
-        collect the temporally ordered page trace their replay consumes.
+        collect the temporally ordered page trace their replay consumes;
+        `collect=True` forces that trace on any store so a Tracer can emit
+        per-hop device spans (one extra jit entry while tracing).
 
         Over a MutableIndex with pending mutations the disk side runs the
         tombstone-overfetch config and the delta's exact results are merged
@@ -551,7 +586,7 @@ class AnnServer:
         stats = search_batched(
             self.store, self.index.pq, kcfg, qvecs,
             medoid=self.index.medoid, memgraph=self.index.memgraph,
-            batch=len(qvecs), collect_trace=self._stateful,
+            batch=len(qvecs), collect_trace=self._stateful or collect,
             account_kernel_io=False)
         stats = stats.take(b)
         if self._mutable and self.index.mutated:
@@ -655,11 +690,11 @@ class AnnServer:
         out = {}
         for t in np.unique(ids):
             m = ids == t
+            _, t_mean, _, t_p99 = _latency_summary(lat_arr[m])
             out[int(t)] = {
                 "completed": int(m.sum()),
-                "mean_latency_us": round(float(lat_arr[m].mean()), 1),
-                "p99_latency_us": round(
-                    float(np.percentile(lat_arr[m], 99)), 1)}
+                "mean_latency_us": round(t_mean, 1),
+                "p99_latency_us": round(t_p99, 1)}
         if ac is not None:
             for t, row in ac.per_tenant_rows().items():
                 out.setdefault(t, {"completed": 0}).update(row)
@@ -732,6 +767,78 @@ class AnnServer:
             prefetch_overlap=overlap,
             shard_pages=sp, shard_depths=sd)
         return np.asarray(lat, np.float64), acct
+
+    def _trace_batch(self, tracer: Tracer, pid: int, dispatch: float,
+                     lat: np.ndarray, acct: dict, stats: QueryStats,
+                     b_times: np.ndarray, b_items, queue_b: np.ndarray,
+                     inter_b: np.ndarray, level: int, rd_us: float,
+                     d: int, store=None) -> None:
+        """Emit one dispatched batch's spans: the batch slice and the
+        model-priced kernel-compute rollup on the executor track, per-shard
+        device busy time (issued reads x read unit — summing these per
+        shard reproduces `_ShardWindow.busy_us` exactly on a non-mutating
+        run), the per-query latency phases (queue / interference / service,
+        whose durations sum to the query's reported latency), and — when
+        the kernel collected a page trace — per-hop markers carrying each
+        hop's page count and per-shard split."""
+        store = store if store is not None else self.store
+        tracer.span("batch", "batch", dispatch, float(lat.max()), pid=pid,
+                    track="executor",
+                    args={"size": len(b_items), "level": level})
+        comp = self.model._compute_us(
+            stats.full_evals.astype(np.float64),
+            stats.pq_evals.astype(np.float64),
+            stats.mem_evals.astype(np.float64), d, self.cfg.pq_m)
+        tracer.span("kernel", "kernel", dispatch, float(np.sum(comp)),
+                    pid=pid, track="executor",
+                    args={"full_evals": float(np.sum(stats.full_evals)),
+                          "pq_evals": float(np.sum(stats.pq_evals))})
+        shard_issued = acct.get("shard_issued")
+        if shard_issued is not None:
+            for s, cnt in enumerate(np.asarray(shard_issued).tolist()):
+                if cnt:
+                    tracer.span("device", "device", dispatch, cnt * rd_us,
+                                pid=pid, track=f"shard{s}",
+                                args={"issued": int(cnt)})
+        elif acct["issued"]:
+            tracer.span("device", "device", dispatch,
+                        acct["issued"] * rd_us, pid=pid, track="shard0",
+                        args={"issued": int(acct["issued"])})
+        page_to_shard = (store.placement.page_to_shard
+                         if shard_issued is not None
+                         and getattr(store, "placement", None) is not None
+                         else None)
+        for bi, item in enumerate(b_items):
+            t_arr_us = float(b_times[bi])
+            q_us, i_us, s_us = (float(queue_b[bi]), float(inter_b[bi]),
+                                float(lat[bi]))
+            tracer.span("queue", "queue", t_arr_us, q_us, pid=pid,
+                        track="query", qid=item)
+            if i_us > 0.0:
+                tracer.span("interference", "interference",
+                            t_arr_us + q_us, i_us, pid=pid, track="query",
+                            qid=item)
+            tracer.span("service", "service", dispatch, s_us, pid=pid,
+                        track="query", qid=item,
+                        args={"latency_us": q_us + i_us + s_us,
+                              "queue_us": q_us, "interference_us": i_us,
+                              "service_us": s_us})
+            if stats.page_trace is None:
+                continue
+            t_hop_us = dispatch
+            for h, hop_pages in enumerate(stats.page_trace[bi]):
+                pages = hop_pages[hop_pages >= 0]
+                if len(pages) == 0:
+                    continue
+                hop_args = {"hop": h, "pages": int(len(pages))}
+                if page_to_shard is not None:
+                    homes = np.bincount(page_to_shard[pages])
+                    for s in np.flatnonzero(homes):
+                        hop_args[f"s{s}_pages"] = int(homes[s])
+                dur_us = len(pages) * rd_us
+                tracer.span(f"hop{h}", "hop", t_hop_us, dur_us, pid=pid,
+                            track="query", qid=item, args=hop_args)
+                t_hop_us += dur_us
 
     # -- closed loop ---------------------------------------------------------
 
@@ -819,11 +926,13 @@ class AnnServer:
 
         all_stats = QueryStats.concat(stats_out)
         lat_arr = np.asarray(lat_out)
+        _, lat_mean, lat_p50, lat_p99 = _latency_summary(lat_arr)
         return ServingReport(
             workers=workers, queries=total, elapsed_us=t_end,
             qps=total / (t_end * 1e-6) if t_end > 0 else 0.0,
-            mean_latency_us=float(lat_arr.mean()),
-            p99_latency_us=float(np.percentile(lat_arr, 99)),
+            mean_latency_us=lat_mean,
+            p50_latency_us=lat_p50,
+            p99_latency_us=lat_p99,
             mean_service_us=float(np.mean(service_out)),
             mean_batch_size=float(np.mean(batch_sizes)),
             pages_per_query=float(all_stats.page_reads.mean()),
@@ -849,7 +958,12 @@ class AnnServer:
                            seed: Optional[int] = None) -> OpenLoopReport:
         """Report for a run that completed nothing (no arrivals, or every
         arrival shed) — no kernel compile is paid. `extra` carries the
-        mutation-outcome fields of an all-mutation window."""
+        mutation-outcome fields of an all-mutation window. Latency
+        columns route through the SAME histogram as the populated path
+        (`_latency_summary` on a zero-length sample): finite zeros with
+        identical formatting and schema, where the old path hardcoded an
+        unrounded `p99_latency_us=0.0` next to the normal path's rounded
+        value and np.percentile would have raised outright."""
         zi = np.zeros(0, np.int64)
         zf = np.zeros(0, np.float64)
         empty = QueryStats(
@@ -858,16 +972,20 @@ class AnnServer:
             hops=zi, page_reads=zf, cache_hits=zf, n_read_records=zf,
             n_eff=zf, full_evals=zf, pq_evals=zf, mem_hops=zi,
             mem_evals=zi)
+        _, lat_mean, lat_p50, lat_p99 = _latency_summary(zf)
         return OpenLoopReport(
             rate_qps=rate_qps, duration_us=duration_us, offered=ac.offered,
-            completed=0, elapsed_us=0.0, qps=0.0, mean_latency_us=0.0,
-            p99_latency_us=0.0, mean_batch_size=0.0, pages_per_query=0.0,
+            completed=0, elapsed_us=0.0, qps=0.0, mean_latency_us=lat_mean,
+            p50_latency_us=lat_p50, p99_latency_us=lat_p99,
+            mean_batch_size=0.0, pages_per_query=0.0,
             issued_pages_per_query=0.0, cache_hit_rate=0.0,
             overlap_frac=0.0, slo_p99_us=self.server_cfg.slo_p99_us,
             slo_violation_frac=0.0, measured_step_us=0.0, stats=empty,
             query_indices=np.zeros(0, np.int64),
             offered_qps=ac.offered / (duration_us * 1e-6),
             admitted=ac.admitted, shed=ac.shed, degraded=0,
+            attribution={"queue_us": zf, "service_us": zf,
+                         "interference_us": zf, "latency_us": zf},
             per_tenant=per_tenant, seed=seed, **(extra or {}))
 
     def serve_open_loop(self, queries: np.ndarray, rate_qps: float,
@@ -876,8 +994,9 @@ class AnnServer:
                         arrivals: Optional[np.ndarray] = None,
                         mutation_mix: Optional[MutationMix] = None,
                         insert_pool: Optional[np.ndarray] = None,
-                        rng: Optional[np.random.Generator] = None
-                        ) -> OpenLoopReport:
+                        rng: Optional[np.random.Generator] = None,
+                        tracer: Optional[Tracer] = None,
+                        trace_pid: int = 0) -> OpenLoopReport:
         """Poisson arrivals at `rate_qps` for `duration_us` of virtual time,
         query vectors drawn round-robin. Arrivals do not wait for
         completions (open loop), so past the device's saturation point the
@@ -924,7 +1043,20 @@ class AnnServer:
         same device: it pushes the next dispatch out (`bg_free`), lands on
         the owning shards' busy time, and is reported per outcome
         (`inserts`/`deletes`/`flushes`/`compactions`/`bg_*` on the
-        report), so compaction visibly competes with query I/O."""
+        report), so compaction visibly competes with query I/O.
+
+        Every reported latency is attributed exactly: per query,
+        `queue_us` (arrival to the dispatch instant the batcher would
+        have picked with an idle background device) + `interference_us`
+        (the extra wait while journal/flush/compaction I/O holds the
+        device) + `service_us` (dispatch to completion) sums to
+        `latency_us` to the float — REPRO_SANITIZE re-checks the sum on
+        every run, and `OpenLoopReport.attribution` carries the arrays.
+        Pass `tracer=` (repro.obs.Tracer) to additionally record the run
+        as spans — arrivals, per-query phases, batches, per-shard device
+        busy time, per-hop page reads, background interference — on
+        replica-group `trace_pid` (fleet replicas trace side by side);
+        `tracer=None` (the default) costs one falsy check per batch."""
         if rate_qps <= 0:
             raise ValueError(f"rate_qps={rate_qps} must be positive")
         if duration_us <= 0:
@@ -1011,6 +1143,7 @@ class AnnServer:
         exec_free = 0.0
         est_service: Optional[float] = None
         lat_out, stats_out, batch_sizes = [], [], []
+        que_out, svc_out, int_out = [], [], []
         qidx_out, tenant_out = [], []
         requested_total = issued_total = hits_total = 0
         overlap_w = 0.0
@@ -1032,9 +1165,14 @@ class AnnServer:
                 sanitize.check(pages >= 0 and us >= 0.0,
                                f"journal drain billed negative time: "
                                f"{pages} pages, {us}us")
-                mu["free"] = max(mu["free"], t) + us
+                bg_start = max(mu["free"], t)
+                mu["free"] = bg_start + us
                 mu["io_us"] += us
                 mu["journal"] += pages
+                if tracer:
+                    tracer.span("journal_drain", "bg", bg_start, us,
+                                pid=trace_pid, track="background",
+                                args={"pages": pages})
 
         def bg_run(acct, t: float, kind: str) -> None:
             if not acct:
@@ -1045,16 +1183,26 @@ class AnnServer:
                            f"background {kind} billed negative time: {us}us "
                            f"(reads={acct['pages_read']}, "
                            f"writes={acct['pages_written']})")
-            mu["free"] = max(mu["free"], t) + us
+            bg_start = max(mu["free"], t)
+            mu["free"] = bg_start + us
             mu["io_us"] += us
             mu["reads"] += acct["pages_read"]
             mu["writes"] += acct["pages_written"]
             mu[kind] += 1
             shard_win.add_background(acct["read_pages"], rd_us)
             shard_win.add_background(acct["written_pages"], wr_us)
+            if tracer:
+                tracer.span(kind, "bg", bg_start, us, pid=trace_pid,
+                            track="background",
+                            args={"pages_read": acct["pages_read"],
+                                  "pages_written": acct["pages_written"]})
 
         def ingest(j: int, executor_idle: bool = False) -> None:
             t = float(arr[j])
+            if tracer:
+                tracer.instant("arrival", "admission", t, pid=trace_pid,
+                               track="admission", qid=j,
+                               args={"kind": int(kinds[j])})
             if kinds[j] == 0:
                 ac.offer(t, j, int(arr_tenant[j]),
                          executor_idle=executor_idle)
@@ -1094,8 +1242,14 @@ class AnnServer:
                 ingest(i)
                 i += 1
             t_fill = pend[mb - 1][0] if len(pend) >= mb else np.inf
-            dispatch = max(exec_free, mu["free"],
-                           min(deadline, t_fill), t0)
+            # `base` is the dispatch instant an idle background device
+            # would have allowed; waiting past it on mu["free"] is time
+            # attributed to background interference (journal drain,
+            # flush/compaction I/O) — the attribution split the per-query
+            # queue_us/interference_us breakdown and the sanitizer's
+            # conservation check both hang off
+            base = max(exec_free, min(deadline, t_fill), t0)
+            dispatch = max(base, mu["free"])
             # admissions up to the dispatch instant (under backlog this is
             # where the queue bound binds and shedding happens)
             while i < n and arr[i] <= dispatch:
@@ -1111,7 +1265,8 @@ class AnnServer:
             b_items = [it for _, it, _ in batch]
             b_tenants = np.asarray([tn for _, _, tn in batch], np.int64)
             stats = self._execute(queries[qidx[b_items]],
-                                  self._level_cfg(level))
+                                  self._level_cfg(level),
+                                  collect=bool(tracer))
             stats.tenants = b_tenants
             lat, acct = self._batch_times_us(stats, len(batch), d)
             requested_total += acct["requested"]
@@ -1125,6 +1280,18 @@ class AnnServer:
             exec_free = dispatch + float(lat.max())
             t_end = max(t_end, exec_free)
             lat_out.extend((done - b_times).tolist())
+            # exact attribution: a query arriving after `base` (admitted
+            # while the batch waited out the background clock) spent its
+            # whole wait under interference, none of it queueing
+            queue_b = np.maximum(base - b_times, 0.0)
+            inter_b = (dispatch - b_times) - queue_b
+            que_out.extend(queue_b.tolist())
+            int_out.extend(inter_b.tolist())
+            svc_out.extend(lat.tolist())
+            if tracer:
+                self._trace_batch(tracer, trace_pid, dispatch, lat, acct,
+                                  stats, b_times, b_items, queue_b, inter_b,
+                                  level, rd_us, d)
             qidx_out.extend(qidx[b_items].tolist())
             tenant_out.extend(b_tenants.tolist())
             batch_sizes.append(len(batch))
@@ -1164,13 +1331,27 @@ class AnnServer:
             return report
         all_stats = QueryStats.concat(stats_out)
         lat_arr = np.asarray(lat_out)
+        que_arr = np.asarray(que_out)
+        svc_arr = np.asarray(svc_out)
+        int_arr = np.asarray(int_out)
+        # REPRO_SANITIZE=1: per-query queue + service + interference must
+        # reproduce the reported latency exactly — no time invented, none
+        # dropped (docs/observability.md: the conservation contract)
+        sanitize.check_attribution(que_arr, svc_arr, int_arr, lat_arr)
+        _, lat_mean, lat_p50, lat_p99 = _latency_summary(lat_arr)
         slo = scfg.slo_p99_us
         report = OpenLoopReport(
             rate_qps=rate_qps, duration_us=duration_us, offered=n_reads,
             completed=completed, elapsed_us=t_end,
             qps=completed / (t_end * 1e-6) if t_end > 0 else 0.0,
-            mean_latency_us=float(lat_arr.mean()),
-            p99_latency_us=float(np.percentile(lat_arr, 99)),
+            mean_latency_us=lat_mean,
+            p50_latency_us=lat_p50,
+            p99_latency_us=lat_p99,
+            mean_queue_us=float(que_arr.mean()),
+            mean_service_us=float(svc_arr.mean()),
+            mean_interference_us=float(int_arr.mean()),
+            attribution={"queue_us": que_arr, "service_us": svc_arr,
+                         "interference_us": int_arr, "latency_us": lat_arr},
             mean_batch_size=float(np.mean(batch_sizes)),
             pages_per_query=float(all_stats.page_reads.mean()),
             issued_pages_per_query=issued_total / completed,

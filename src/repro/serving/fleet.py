@@ -77,9 +77,10 @@ from repro import sanitize
 from repro.core.stats import QueryStats
 from repro.io import profile_from_counters
 from repro.mutation import Compactor, MutationMix
+from repro.obs import Tracer
 from repro.serving.admission import AdmissionController
 from repro.serving.ann_server import (AnnServer, OpenLoopReport,
-                                      _measured_step)
+                                      _latency_summary, _measured_step)
 
 #: FleetConfig.routing policy names.
 ROUTING_POLICIES = ("least-work", "round-robin")
@@ -358,14 +359,28 @@ class FleetServer(AnnServer):
                     arrivals: Optional[np.ndarray] = None,
                     mutation_mix: Optional[MutationMix] = None,
                     insert_pool: Optional[np.ndarray] = None,
-                    rng: Optional[np.random.Generator] = None
-                    ) -> FleetReport:
+                    rng: Optional[np.random.Generator] = None,
+                    tracer: Optional[Tracer] = None) -> FleetReport:
         """The open-loop contract of `AnnServer.serve_open_loop` (same
         arrival/admission/batcher semantics, one seeded rng end to end)
         run against the replica groups: every dispatched batch routes to
         one group, groups serve concurrently in virtual time, and the
         migration / autoscale hooks run on the virtual clock between
-        dispatches. Returns a `FleetReport`."""
+        dispatches. Returns a `FleetReport`.
+
+        Latency attribution follows the single-server contract — every
+        completed query satisfies ``queue_us + service_us +
+        interference_us == latency_us`` — with the fleet's queue phase
+        defined against the *background-free counterfactual*: queue is
+        the wait until the fleet would have dispatched with every
+        group's background/migration clock idle, and interference is
+        the extra wait the bg/migration work actually caused on the
+        routed group.
+
+        Pass a `repro.obs.Tracer` to record spans (pid = replica group
+        id; admission instants land on pid 0's admission track, device
+        and query spans on the routed group's tracks, background and
+        migration spans on each billed group's own tracks)."""
         if rate_qps <= 0:
             raise ValueError(f"rate_qps={rate_qps} must be positive")
         if duration_us <= 0:
@@ -472,11 +487,18 @@ class FleetServer(AnnServer):
             for r in self.replicas:
                 if not r.active:
                     continue
-                r.bg_free = max(r.bg_free, t) + us
+                bg_start = max(r.bg_free, t)
+                r.bg_free = bg_start + us
                 r.busy_us += us
                 mu["io_us"] += us
                 r.window.add_background(acct["read_pages"], rd_us)
                 r.window.add_background(acct["written_pages"], wr_us)
+                if tracer:
+                    tracer.span(kind, "bg", bg_start, us, pid=r.rid,
+                                track="background",
+                                args={"pages_read": int(acct["pages_read"]),
+                                      "pages_written":
+                                          int(acct["pages_written"])})
 
         def maybe_migrate(now: float) -> None:
             mcfg = fcfg.migration
@@ -535,8 +557,14 @@ class FleetServer(AnnServer):
                     mig["reads"] += len(promoted)
                     mig["writes"] += len(promoted) * (S - 1)
                     mig["io_us"] += io
-                    r.mig_free = max(r.mig_free, now) + io
+                    mig_start = max(r.mig_free, now)
+                    r.mig_free = mig_start + io
                     r.busy_us += io
+                    if tracer:
+                        tracer.span("migration", "bg", mig_start, io,
+                                    pid=r.rid, track="migration",
+                                    args={"promoted": len(promoted),
+                                          "demoted": len(demoted)})
                     r.window.add_background(promoted, rd_us)
                     r.window.add_broadcast_writes(promoted, wr_us)
                     # the copy pulled the page's bytes through memory onto
@@ -593,6 +621,9 @@ class FleetServer(AnnServer):
 
         def ingest(j: int, executor_idle: bool = False) -> None:
             t = float(arr[j])
+            if tracer:
+                tracer.instant("arrival", "admission", t, pid=0, qid=j,
+                               args={"kind": int(kinds[j])})
             if kinds[j] == 0:
                 if budget_take(t):
                     ac.offer(t, j, int(arr_tenant[j]),
@@ -612,6 +643,9 @@ class FleetServer(AnnServer):
 
         est_service: Optional[float] = None
         lat_out, stats_out, batch_sizes = [], [], []
+        que_out: List[float] = []
+        svc_out: List[float] = []
+        int_out: List[float] = []
         qidx_out, tenant_out = [], []
         requested_total = issued_total = hits_total = 0
         overlap_w = 0.0
@@ -637,8 +671,16 @@ class FleetServer(AnnServer):
                 ingest(i)
                 i += 1
             t_fill = pend[mb - 1][0] if len(pend) >= mb else np.inf
-            earliest = min(r.free_at() for r in self._routable())
+            routable = self._routable()
+            earliest = min(r.free_at() for r in routable)
+            exec_earliest = min(r.exec_free for r in routable)
             dispatch = max(earliest, min(deadline, t_fill), t0)
+            # background-free counterfactual: when would this batch have
+            # dispatched if every group's bg/migration clock were idle?
+            # The gap between it and the real dispatch is the batch's
+            # attributed interference (exec_earliest <= earliest and
+            # rep.exec_free <= rep.free_at(), so nobg <= dispatch).
+            nobg = max(exec_earliest, min(deadline, t_fill), t0)
             while i < n and arr[i] <= dispatch:
                 ingest(i)
                 i += 1
@@ -650,13 +692,15 @@ class FleetServer(AnnServer):
             routable = self._routable()
             rep = self._route(routable)
             dispatch = max(dispatch, rep.free_at())
+            nobg = max(nobg, rep.exec_free)
             level = ac.pressure_level()
             batch = ac.take_batch(mb)
             b_times = np.asarray([t for t, _, _ in batch])
             b_items = [it for _, it, _ in batch]
             b_tenants = np.asarray([tn for _, _, tn in batch], np.int64)
             stats = self._execute(queries[qidx[b_items]],
-                                  self._level_cfg(level))
+                                  self._level_cfg(level),
+                                  collect=bool(tracer))
             stats.tenants = b_tenants
             lat, acct = self._batch_times_us(
                 stats, len(batch), d, store=rep.store,
@@ -678,6 +722,16 @@ class FleetServer(AnnServer):
             rep.exec_free = dispatch + float(lat.max())
             t_end = max(t_end, rep.exec_free)
             lat_out.extend((done - b_times).tolist())
+            queue_b = np.maximum(nobg - b_times, 0.0)
+            inter_b = (dispatch - b_times) - queue_b
+            que_out.extend(queue_b.tolist())
+            int_out.extend(inter_b.tolist())
+            svc_out.extend(lat.tolist())
+            if tracer:
+                self._trace_batch(tracer, rep.rid, dispatch, lat, acct,
+                                  stats, b_times, b_items, queue_b,
+                                  inter_b, level, rd_us, d,
+                                  store=rep.store)
             qidx_out.extend(qidx[b_items].tolist())
             tenant_out.extend(b_tenants.tolist())
             batch_sizes.append(len(batch))
@@ -716,24 +770,38 @@ class FleetServer(AnnServer):
                 bg_io_us=mu["io_us"],
                 bg_util=mu["io_us"] / t_end if t_end > 0 else 0.0,
                 overlap_ratio=self.index.overlap_ratio())
+        que_arr = np.asarray(que_out, np.float64)
+        svc_arr = np.asarray(svc_out, np.float64)
+        int_arr = np.asarray(int_out, np.float64)
+        # both report paths price latency columns off the same histogram
+        # (empty histograms report the finite 0.0 default, schema intact)
+        _, mean_lat_us, p50, p99 = _latency_summary(lat_arr)
         if completed == 0:
             all_stats = self._empty_open_report(
                 rate_qps, duration_us, ac, per_tenant).stats
-            mean_lat_us = p99 = 0.0
             mean_batch = pages_q = issued_q = 0.0
         else:
             all_stats = QueryStats.concat(stats_out)
-            mean_lat_us = float(lat_arr.mean())
-            p99 = float(np.percentile(lat_arr, 99))
             mean_batch = float(np.mean(batch_sizes))
             pages_q = float(all_stats.page_reads.mean())
             issued_q = issued_total / completed
+        # REPRO_SANITIZE=1: every completed query's phases must sum back
+        # to its reported latency (the fleet conservation contract)
+        sanitize.check_attribution(que_arr, svc_arr, int_arr, lat_arr)
         slo = scfg.slo_p99_us
         report = FleetReport(
             rate_qps=rate_qps, duration_us=duration_us, offered=n_reads,
             completed=completed, elapsed_us=t_end,
             qps=completed / (t_end * 1e-6) if t_end > 0 else 0.0,
-            mean_latency_us=mean_lat_us, p99_latency_us=p99,
+            mean_latency_us=mean_lat_us, p50_latency_us=p50,
+            p99_latency_us=p99,
+            mean_queue_us=float(que_arr.mean()) if completed else 0.0,
+            mean_service_us=float(svc_arr.mean()) if completed else 0.0,
+            mean_interference_us=(float(int_arr.mean())
+                                  if completed else 0.0),
+            attribution={"queue_us": que_arr, "service_us": svc_arr,
+                         "interference_us": int_arr,
+                         "latency_us": lat_arr.astype(np.float64)},
             mean_batch_size=mean_batch, pages_per_query=pages_q,
             issued_pages_per_query=issued_q,
             cache_hit_rate=(hits_total / requested_total

@@ -221,12 +221,13 @@ def test_mutations_invalidate_every_group(base_index, small_dataset):
 
 EXPECTED_BASE_COLS = [
     "rate_qps", "offered", "offered_qps", "qps", "admitted", "shed",
-    "degraded", "mean_latency_us", "p99_latency_us", "mean_batch",
-    "pages_per_query", "issued_pages_per_query", "cache_hit_rate",
-    "overlap_frac", "slo_violation_frac", "seed", "shards",
-    "shard_imbalance", "max_shard_util", "groups", "groups_final",
-    "groups_added", "groups_dropped", "migrations", "promoted_pages",
-    "mig_pages_written", "shed_budget"]
+    "degraded", "mean_latency_us", "p50_latency_us", "p99_latency_us",
+    "mean_queue_us", "mean_service_us", "mean_interference_us",
+    "mean_batch", "pages_per_query", "issued_pages_per_query",
+    "cache_hit_rate", "overlap_frac", "slo_violation_frac", "seed",
+    "shards", "shard_imbalance", "max_shard_util", "groups",
+    "groups_final", "groups_added", "groups_dropped", "migrations",
+    "promoted_pages", "mig_pages_written", "shed_budget"]
 
 
 def test_fleet_row_schema_stable_under_groups(base_index, small_dataset):

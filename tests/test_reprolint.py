@@ -1,6 +1,6 @@
 """reprolint catches seeded contract violations and passes compliant code.
 
-Per rule (R001–R006): at least one true-positive fixture the rule must
+Per rule (R001–R007): at least one true-positive fixture the rule must
 flag and one clean fixture it must not; plus suppression handling, CLI
 exit codes, JSON output, and the live-tree-is-clean gate the CI lint job
 relies on."""
@@ -325,6 +325,38 @@ def test_r006_accepts_seeded_generators_and_ignores_src():
 
 
 # ---------------------------------------------------------------------------
+# R007 span clock discipline
+
+
+R007_BAD = """
+    def emit(tracer, t_us):
+        # a fabricated duration: no clock value, no *_service_us pricing
+        tracer.span("device", "device", t0_us=t_us, dur_us=123.4)
+"""
+
+R007_GOOD = """
+    def emit(tracer, model, t_us, issued, page_bytes):
+        rd_us = model.read_service_us(page_bytes)
+        tracer.span("device", "device", t0_us=t_us, dur_us=issued * rd_us)
+        tracer.span("idle", "device", t0_us=t_us, dur_us=0.0)
+        tracer.instant("mark", "admission", t_us=float(t_us))
+"""
+
+
+def test_r007_flags_unpriced_span_durations_in_obs():
+    found = findings(R007_BAD, "src/repro/obs/x.py", rules=["R007"])
+    assert len(found) == 1
+    assert "dur_us" in found[0].message
+
+
+def test_r007_accepts_billed_values_and_only_governs_obs():
+    assert rule_ids(R007_GOOD, "src/repro/obs/x.py", rules=["R007"]) == set()
+    # outside src/repro/obs/ the serving loops own the billing contract
+    assert rule_ids(R007_BAD, "src/repro/serving/x.py",
+                    rules=["R007"]) == set()
+
+
+# ---------------------------------------------------------------------------
 # suppressions
 
 
@@ -397,13 +429,13 @@ def test_cli_exit_codes_and_json(tmp_path):
     assert unknown.returncode == 2 and "unknown rule" in unknown.stderr
 
 
-def test_cli_lists_all_six_rules():
+def test_cli_lists_all_seven_rules():
     out = run_cli("--list-rules")
     assert out.returncode == 0
-    for rid in ("R001", "R002", "R003", "R004", "R005", "R006"):
+    for rid in ("R001", "R002", "R003", "R004", "R005", "R006", "R007"):
         assert rid in out.stdout
     assert set(all_rules()) == {"R001", "R002", "R003", "R004", "R005",
-                                "R006"}
+                                "R006", "R007"}
 
 
 # ---------------------------------------------------------------------------

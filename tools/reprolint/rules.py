@@ -1,4 +1,4 @@
-"""The repo-specific reprolint rules (R001–R006).
+"""The repo-specific reprolint rules (R001–R007).
 
 Each rule encodes one measurement invariant from ARCHITECTURE.md /
 docs/contracts.md. They are deliberately conservative static
@@ -531,3 +531,40 @@ class R006SeededRng(Rule):
                 yield self.finding(
                     node, f"stdlib random.{name}(...) uses hidden global "
                           f"state — use np.random.default_rng(seed)")
+
+
+# ---------------------------------------------------------------------------
+# R007 — span clock discipline
+
+
+@rule
+class R007SpanClockDiscipline(Rule):
+    """Observability is a *mirror* of the priced clocks, never a source:
+    inside `src/repro/obs/`, every ``*_us`` keyword argument (Span fields,
+    ``tracer.span(t0_us=..., dur_us=...)``, summary rollups) must derive
+    from already-billed clock values or the device model's
+    ``*_service_us`` pricing — the same discipline R003 enforces on clock
+    attributes, extended to the call boundary spans are built through. A
+    fresh nonzero literal flowing into a span duration would let a trace
+    report time the complexity model never priced.
+    """
+
+    rule_id = "R007"
+    name = "span-clock-discipline"
+    description = ("*_us keyword arguments in src/repro/obs/ must come "
+                   "from clock values or *_service_us pricing")
+
+    def check(self, tree: ast.Module, src: str) -> Iterator[Finding]:
+        if not _in_parts(self.path, "obs"):
+            return
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            for kw in node.keywords:
+                if (kw.arg is not None and kw.arg.endswith("_us")
+                        and not R003ClockDiscipline._billed(kw.value)):
+                    yield self.finding(
+                        kw.value,
+                        f"span/metric field {kw.arg}= fed from a value "
+                        f"with no clock reference or *_service_us pricing "
+                        f"(trace time must mirror billed clocks)")
